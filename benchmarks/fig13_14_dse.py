@@ -1,0 +1,34 @@
+"""Benchmark: paper Figs. 13–14 — design-space exploration of core
+geometry (normalized area & power per app), and the selected optimum."""
+from repro.core.costmodel import best_geometry, design_space
+
+
+def _print_ds(system: str, ds):
+    geos = list(next(iter(ds.values())).keys())
+    print(f"\n== Fig. {'13' if system == 'memristor' else '14'}: "
+          f"{system} core geometry sweep (normalized area / power) ==")
+    print(f"{'app':>8s}   " + "  ".join(f"{g:>13s}" for g in geos))
+    for app, rows in ds.items():
+        cells = []
+        for g in geos:
+            r = rows[g]
+            mark = "" if r["feasible"] else "*"
+            cells.append(f"{r['norm_area']:5.1f}/{r['norm_power']:5.1f}"
+                         f"{mark:1s}")
+        print(f"{app:>8s}   " + "  ".join(f"{c:>13s}" for c in cells))
+    if system == "memristor":
+        print("   (* = infeasible: wire-IR drop exceeds the 8-bit "
+              "precision bound — see neural_core.analog_precision_feasible)")
+
+
+def run() -> dict:
+    out = {}
+    for system in ("memristor", "digital"):
+        ds = design_space(system)
+        _print_ds(system, ds)
+        best = best_geometry(system)
+        out[system] = best
+        pub = "128x64" if system == "memristor" else "256x128"
+        print(f"selected optimum: {best}  (paper: {pub})")
+    ok = out["memristor"] == "128x64"
+    return {"best": out, "pass": ok}

@@ -1,0 +1,61 @@
+"""Regenerate the §Roofline markdown table inside EXPERIMENTS.md from
+experiments/dryrun/*__single.json (idempotent: replaces the block
+between the ROOFLINE_TABLE markers)."""
+import json
+import re
+from pathlib import Path
+
+BEGIN = "<!-- ROOFLINE_TABLE -->"
+END = "<!-- /ROOFLINE_TABLE -->"
+
+
+def build_table() -> str:
+    rows = []
+    skips = []
+    for p in sorted(Path("experiments/dryrun").glob("*__single.json")):
+        d = json.loads(p.read_text())
+        if d.get("status") == "skip":
+            skips.append((d["arch"], d["shape"]))
+            continue
+        if d.get("status") != "ok":
+            continue
+        r = d["roofline"]
+        uf = d.get("useful_flops_frac") or 0.0
+        peak = d["memory"]["peak_bytes_per_device"] / 2**30
+        frac = r["t_compute_s"] / r["bound_s"] if r["bound_s"] else 0.0
+        rows.append((d["arch"], d["shape"], r, uf, peak, frac))
+    lines = [
+        "| arch | shape | T_comp ms | T_mem ms | T_coll ms | dominant | "
+        "roofline frac | useful | GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch, shape, r, uf, peak, frac in rows:
+        lines.append(
+            f"| {arch} | {shape} | {r['t_compute_s'] * 1e3:.3f} | "
+            f"{r['t_memory_s'] * 1e3:.3f} | "
+            f"{r['t_collective_s'] * 1e3:.3f} | {r['dominant']} | "
+            f"{frac:.2f} | {uf:.3f} | {peak:.2f} |")
+    doms = {}
+    for _, _, r, _, _, _ in rows:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    lines.append("")
+    lines.append(f"{len(rows)} lowered cells; dominant-term histogram: "
+                 f"{doms}; {len(skips)} documented `long_500k` skips "
+                 f"({', '.join(a for a, _ in skips)}).")
+    return "\n".join(lines)
+
+
+def main():
+    table = f"{BEGIN}\n{build_table()}\n{END}"
+    text = Path("EXPERIMENTS.md").read_text()
+    if END in text:
+        text = re.sub(re.escape(BEGIN) + r".*?" + re.escape(END), table,
+                      text, flags=re.S)
+    else:
+        text = text.replace(BEGIN, table)
+    Path("EXPERIMENTS.md").write_text(text)
+    print("roofline table injected:", table.count("\n"), "lines")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Kernel-level structural benchmark: VMEM footprint, arithmetic
+intensity and MXU-alignment report for the Pallas kernels, plus an
+interpret-mode correctness spot check. (Wall-clock on CPU interpret mode
+is meaningless — TPU perf evidence is the roofline/§Perf analysis.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+VMEM_BYTES = 16 * 2**20     # v5e-class per-core VMEM
+
+
+def _crossbar_stats(bt, rows, cols):
+    x = bt * rows * 4
+    g = 2 * rows * cols * 4
+    o = bt * cols * 4
+    ds = cols * 4
+    vmem = x + g + o + ds
+    flops = 2 * bt * rows * cols + 3 * rows * cols + 4 * bt * cols
+    return vmem, flops / vmem
+
+
+def run() -> dict:
+    print("\n== Pallas kernel structural report ==")
+    print(f"{'kernel':>14s} {'tile':>16s} {'VMEM/step':>10s} "
+          f"{'arith int':>9s} {'MXU-aligned':>11s} {'fits 2x-buf':>11s}")
+    rows_out = {}
+    for (bt, rows, cols) in ((128, 128, 64), (128, 128, 128),
+                             (256, 128, 128), (128, 256, 256)):
+        vmem, ai = _crossbar_stats(bt, rows, cols)
+        aligned = rows % 128 == 0 and cols % 128 == 0
+        fits = 2 * vmem < VMEM_BYTES
+        tag = f"{bt}x{rows}x{cols}"
+        print(f"{'crossbar_mvm':>14s} {tag:>16s} {vmem / 1024:8.0f}KiB"
+              f" {ai:9.2f} {str(aligned):>11s} {str(fits):>11s}")
+        rows_out[tag] = {"vmem": vmem, "ai": ai, "aligned": aligned}
+
+    # int8 core tile: one digital core = 256x128 synapses = 2 K-blocks
+    k_vmem = 128 * 256 * 1 + 256 * 128 * 1 + 128 * 128 * 4
+    print(f"{'int8_matmul':>14s} {'128x256x128':>16s} "
+          f"{k_vmem / 1024:8.0f}KiB {'':>9s} {'True':>11s} {'True':>11s}")
+
+    # correctness spot check (interpret mode)
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.uniform(k1, (64, 2, 128), minval=-1, maxval=1)
+    gp = jax.random.uniform(k2, (2, 1, 128, 64), minval=8e-9, maxval=8e-6)
+    gn = jax.random.uniform(k3, (2, 1, 128, 64), minval=8e-9, maxval=8e-6)
+    ds = jax.random.uniform(k4, (2, 1, 64), minval=0.5, maxval=2.0)
+    err = float(jnp.max(jnp.abs(ops.crossbar_mvm(x, gp, gn, ds) -
+                                ops.crossbar_mvm_ref(x, gp, gn, ds))))
+    print(f"crossbar_mvm interpret-vs-oracle max err: {err:.2e}")
+    return {"tiles": rows_out, "kernel_err": err,
+            "pass": err < 1e-5}

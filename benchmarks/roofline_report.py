@@ -1,0 +1,52 @@
+"""Roofline report: aggregates experiments/dryrun/*.json into the
+per-(arch × shape) table EXPERIMENTS.md §Roofline embeds (deliverable g).
+Single-pod cells only, as specified; multi-pod cells are the §Dry-run
+evidence."""
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def load_cells(mesh: str = "single"):
+    cells = []
+    for p in sorted(DRYRUN_DIR.glob(f"*__{mesh}.json")):
+        d = json.loads(p.read_text())
+        cells.append(d)
+    return cells
+
+
+def run() -> dict:
+    cells = load_cells("single")
+    if not cells:
+        print("no dry-run cells found — run python -m repro.launch.dryrun")
+        return {"pass": False}
+    ok_cells = [c for c in cells if c.get("status") == "ok"]
+    skips = [c for c in cells if c.get("status") == "skip"]
+    errors = [c for c in cells if c.get("status") == "error"]
+
+    print("\n== Roofline (single pod 16x16, v5e-class constants) ==")
+    print(f"{'arch':>22s} {'shape':>12s} {'Tcomp ms':>9s} {'Tmem ms':>9s}"
+          f" {'Tcoll ms':>9s} {'dominant':>10s} {'useful':>7s}"
+          f" {'GiB/dev':>8s}")
+    for c in ok_cells:
+        r = c["roofline"]
+        uf = c.get("useful_flops_frac")
+        peak = c["memory"]["peak_bytes_per_device"] / 2**30
+        print(f"{c['arch']:>22s} {c['shape']:>12s}"
+              f" {r['t_compute_s'] * 1e3:9.3f}"
+              f" {r['t_memory_s'] * 1e3:9.3f}"
+              f" {r['t_collective_s'] * 1e3:9.3f}"
+              f" {r['dominant']:>10s}"
+              f" {uf if uf is None else format(uf, '6.3f'):>7s}"
+              f" {peak:8.2f}")
+    print(f"\ncells: {len(ok_cells)} ok, {len(skips)} documented skips, "
+          f"{len(errors)} errors")
+    doms = {}
+    for c in ok_cells:
+        doms[c["roofline"]["dominant"]] = \
+            doms.get(c["roofline"]["dominant"], 0) + 1
+    print("dominant-term histogram:", doms)
+    return {"ok": len(ok_cells), "skips": len(skips),
+            "errors": len(errors), "dominant": doms,
+            "pass": len(errors) == 0 and len(ok_cells) > 0}

@@ -1,0 +1,55 @@
+"""Benchmark harness entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One benchmark per paper table/figure (deliverable d) plus the roofline
+report (deliverable g) and the beyond-paper LM-feasibility study.
+"""
+import json
+import sys
+import time
+
+
+def main():
+    from benchmarks import (fig12_bitwidth, fig13_14_dse, kernel_bench,
+                            lm_crossbar_feasibility, programming_bench,
+                            roofline_report, table1_cores,
+                            tables2to6_apps)
+
+    suites = [
+        ("table1_cores", table1_cores.run),
+        ("tables2to6_apps", tables2to6_apps.run),
+        ("fig12_bitwidth", fig12_bitwidth.run),
+        ("fig13_14_dse", fig13_14_dse.run),
+        ("programming", programming_bench.run),
+        ("kernels", kernel_bench.run),
+        ("roofline", roofline_report.run),
+        ("lm_feasibility", lm_crossbar_feasibility.run),
+    ]
+    results = {}
+    failed = []
+    for name, fn in suites:
+        t0 = time.time()
+        try:
+            res = fn()
+        except Exception as e:  # noqa: BLE001 — report and continue
+            res = {"pass": False, "error": repr(e)}
+        res["seconds"] = round(time.time() - t0, 1)
+        results[name] = res
+        if not res.get("pass", False):
+            failed.append(name)
+
+    print("\n================ benchmark summary ================")
+    for name, res in results.items():
+        status = "PASS" if res.get("pass") else "FAIL"
+        print(f"  {name:>18s}: {status}  ({res['seconds']}s)")
+    with open("bench_results.json", "w") as f:
+        json.dump({k: {kk: vv for kk, vv in v.items()
+                       if kk in ("pass", "seconds", "error")}
+                   for k, v in results.items()}, f, indent=1)
+    if failed:
+        print(f"FAILED: {failed}")
+        sys.exit(1)
+    print("all benchmarks reproduce the paper's claims")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Benchmark: paper Table I — per-core area/power/leakage/timing."""
+from repro.configs.paper_apps import PAPER_TABLE_I
+from repro.core.neural_core import table1
+
+
+def run() -> dict:
+    ours = table1()
+    rows = []
+    worst = 0.0
+    for sysname, row in ours.items():
+        pub = PAPER_TABLE_I[sysname]
+        devs = {}
+        for k in ("area_mm2", "power_mw", "leak_mw", "time_s"):
+            rel = abs(row[k] - pub[k]) / pub[k]
+            devs[k] = rel
+            worst = max(worst, rel)
+        rows.append((sysname, row, pub, devs))
+
+    print("\n== Table I: core area/power/timing (ours vs published) ==")
+    print(f"{'core':>8s} {'area mm2':>18s} {'power mW':>18s} "
+          f"{'leak mW':>16s} {'time s':>22s}")
+    for sysname, row, pub, _ in rows:
+        print(f"{sysname:>8s} {row['area_mm2']:8.4f}/{pub['area_mm2']:<8.4f}"
+              f" {row['power_mw']:8.4f}/{pub['power_mw']:<8.4f}"
+              f" {row['leak_mw']:7.4f}/{pub['leak_mw']:<7.4f}"
+              f" {row['time_s']:10.3e}/{pub['time_s']:<10.3e}")
+    print(f"worst relative deviation: {worst:.4f}")
+    return {"worst_rel_dev": worst, "pass": worst < 0.02}

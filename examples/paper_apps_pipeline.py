@@ -1,0 +1,82 @@
+"""Streaming sensor pipeline: the paper's edge + motion applications
+running end-to-end on the simulated fabric.
+
+A procedural sensor stream (moving pattern) is pushed through
+  * the RISC reference algorithms (Sobel / pixel-deviation), and
+  * the crossbar-deployed neural approximations (trained ex situ),
+then the outputs are compared and the mapped system's real-time margin
+is reported — §IV.B/§V.C in one script.
+
+Run:  PYTHONPATH=src python examples/paper_apps_pipeline.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_apps import APPS
+from repro.core.costmodel import specialized_cost
+from repro.data.images import sensor_stream
+from repro.optim.qat import train_mlp
+from repro.core.crossbar_layer import crossbar_linear
+
+
+def sobel_reference(img):
+    """The RISC system's algorithm (§IV.B): 3x3 Sobel magnitude."""
+    kx = jnp.array([[-1, 0, 1], [-2, 0, 2], [-1, 0, 1]], jnp.float32)
+    ky = kx.T
+    from jax.scipy.signal import convolve2d
+    gx = convolve2d(img, kx, mode="valid")
+    gy = convolve2d(img, ky, mode="valid")
+    return jnp.sqrt(gx ** 2 + gy ** 2)
+
+
+def windows3x3(img):
+    H, W = img.shape
+    idx = jnp.arange(H - 2)[:, None] + jnp.arange(3)[None, :]
+    rows = img[idx]                       # (H-2, 3, W)
+    jdx = jnp.arange(W - 2)[:, None] + jnp.arange(3)[None, :]
+    w = rows[:, :, jdx]                   # (H-2, 3, W-2, 3)
+    return w.transpose(0, 2, 1, 3).reshape(-1, 9)
+
+
+def main():
+    frames = sensor_stream(seed=0, frames=4, h=48, w=48)
+
+    # -- edge: train the 9→20→1 approximation against Sobel ----------- #
+    print("== edge detection: NN approximation of Sobel (SRAM net) ==")
+    img = frames[0]
+    X = windows3x3(img) - 0.5          # center pixels for conditioning
+    ref = sobel_reference(img).reshape(-1)
+    y = (ref > jnp.percentile(ref, 50)).astype(jnp.int32)  # balanced mask
+    t = train_mlp(np.asarray(X), np.asarray(y), (9, 20, 2),
+                  activation="sigmoid", weight_bits=8, act_bits=8,
+                  steps=800, lr=0.5)
+    # deploy on crossbars
+    h = crossbar_linear(X, t["params"][0]["w"]) + t["params"][0]["b"]
+    h = jax.nn.sigmoid(h)
+    out = crossbar_linear(h, t["params"][1]["w"]) + t["params"][1]["b"]
+    pred = jnp.argmax(out, -1)
+    agree = float(jnp.mean(pred == y))
+    print(f"  deployed-vs-Sobel edge agreement: {100 * agree:.1f}%")
+
+    # -- motion: pixel deviation between frames ------------------------ #
+    print("== motion estimation: 8x8 grid deviations ==")
+    a, b = frames[0], frames[1]
+    dev = jnp.abs(a - b).reshape(6, 8, 6, 8).mean((1, 3))
+    motion_frac = float((dev > 0.05).mean())
+    print(f"  reference motion fraction: {100 * motion_frac:.0f}% "
+          f"(moving pattern — nonzero by construction)")
+
+    # -- real-time margins on the mapped fabric ------------------------ #
+    print("== mapped 1T1M systems at the paper's real-time loads ==")
+    for app_id in ("edge", "motion"):
+        c = specialized_cost(APPS[app_id], "memristor")
+        m = c.mapping
+        margin = m.items_per_second_capacity * m.replication / \
+            APPS[app_id].items_per_second
+        print(f"  {app_id:>6s}: {c.cores:3d} cores, {c.power_mw:7.3f} mW, "
+              f"throughput margin {margin:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Architecture registry: ``--arch <id>`` → ModelConfig."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401
+    ModelConfig,
+    ShapeConfig,
+    SHAPES,
+    SHAPES_BY_NAME,
+    applicable,
+)
+
+_ARCH_MODULES: Dict[str, str] = {
+    "zamba2-1.2b": "repro.configs.zamba2_1p2b",
+    "xlstm-350m": "repro.configs.xlstm_350m",
+    "internvl2-26b": "repro.configs.internvl2_26b",
+    "musicgen-large": "repro.configs.musicgen_large",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "granite-3-8b": "repro.configs.granite_3_8b",
+    "gemma2-9b": "repro.configs.gemma2_9b",
+    "qwen1.5-0.5b": "repro.configs.qwen1p5_0p5b",
+    "deepseek-7b": "repro.configs.deepseek_7b",
+}
+
+ARCH_IDS: List[str] = list(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_ARCH_MODULES[arch]).CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_ARCH_MODULES[arch]).reduced()

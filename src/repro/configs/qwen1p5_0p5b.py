@@ -1,0 +1,35 @@
+"""qwen1.5-0.5b — dense transformer with QKV bias.
+
+24L d_model=1024 16H (GQA kv=16) d_ff=2816 vocab=151936
+[hf:Qwen/Qwen1.5-0.5B; hf].
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-0.5b",
+    family="dense",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=2816,
+    vocab_size=151_936,
+    qkv_bias=True,
+    tie_embeddings=True,
+    grad_accum=2,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(
+        name="qwen-smoke",
+        num_layers=3,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=512,
+        grad_accum=1,
+    )

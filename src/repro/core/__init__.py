@@ -1,0 +1,15 @@
+"""The paper's primary contribution: memristor/SRAM multicore neural
+processors — device + crossbar models, the §IV.C mapping compiler, the
+static mesh router, and the Tables I–VI cost model."""
+from repro.core.crossbar import (column_gain, crossbar_forward,
+                                 effective_weights, eq3_dot_product,
+                                 pairs_from_weights)
+from repro.core.crossbar_layer import (CrossbarParams, crossbar_apply,
+                                       crossbar_linear, digital_linear,
+                                       program_layer)
+from repro.core.device import DEFAULT_DEVICE, DeviceModel
+from repro.core.mapping import (Mapping, Unit, map_networks, nn_macs,
+                                risc_cores_needed, split_networks)
+from repro.core.neural_core import (CoreGeometry, DigitalCore,
+                                    MemristorCore, RiscCore, table1)
+from repro.core.routing import RouteReport, route

@@ -1,0 +1,126 @@
+"""Memristor crossbar functional model — Eq. 3 (paper §III.A/B).
+
+A column j of the crossbar with differential input pairs computes
+
+            Σ_i x_i (σ⁺_ij − σ⁻_ij)
+  DP_j  =  ─────────────────────────            (Eq. 3)
+            Σ_i (σ⁺_ij + σ⁻_ij)
+
+i.e. a resistive divider: the numerator is the signed analog dot
+product, the denominator is the total column loading. Key consequences
+modeled here (and mirrored by the Pallas kernel in kernels/):
+
+  * the column has a *gain* g_j = Σ(σ⁺+σ⁻) that depends only on the
+    programmed weights, not on the input — so it can be computed once
+    per tile and folded into downstream scales;
+  * a threshold activation (inverter pair) is gain-invariant (sign
+    only), which is exactly why the paper pairs Eq. 3 with thresholds;
+  * wire resistance attenuates devices far from the drivers; we apply a
+    first-order series-resistance correction per (row, col) position,
+    matching the paper's statement that SPICE runs included wire R.
+
+Inputs are analog voltages in [-1, 1] (each input drives a +V/−V pair
+of rows — Fig. 5 — which is what makes the numerator signed).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.device import DeviceModel, DEFAULT_DEVICE
+
+# Per-segment crossbar wire resistance (Ω). One cell pitch of metal in a
+# 45 nm process is ~1-2.5 Ω; 2.5 is the conservative figure used in the
+# memristor-crossbar literature the paper builds on.
+WIRE_R_OHM = 2.5
+
+
+def wire_attenuation(rows: int, cols: int, g_nominal: float,
+                     r_seg: float = WIRE_R_OHM) -> jax.Array:
+    """First-order attenuation factor per device position.
+
+    A device at (i, j) sees ≈ r_seg·(i + (cols − j)) of series wire on
+    its current path (drive from row head, sense at column foot), so its
+    effective conductance is G/(1 + G·R_path). Returns the (rows, cols)
+    multiplicative factor for a device of nominal conductance G.
+    """
+    i = jnp.arange(rows, dtype=jnp.float32)[:, None]
+    j = jnp.arange(cols, dtype=jnp.float32)[None, :]
+    r_path = r_seg * (i + (cols - 1 - j))
+    return 1.0 / (1.0 + g_nominal * r_path)
+
+
+def eq3_dot_product(x: jax.Array, gp: jax.Array, gn: jax.Array,
+                    r_seg: float = 0.0) -> jax.Array:
+    """Eq. 3 for batched inputs.
+
+    x:  (..., M) analog voltages in [-1, 1]
+    gp, gn: (M, N) conductance pairs
+    Returns DP: (..., N) voltages in [-1, 1] (divider output ≤ max|x|).
+    """
+    if r_seg:
+        att = wire_attenuation(gp.shape[0], gp.shape[1],
+                               float(DEFAULT_DEVICE.g_on), r_seg)
+        gp = gp * att
+        gn = gn * att
+    num = x @ (gp - gn)
+    den = jnp.sum(gp + gn, axis=0)  # (N,) input-independent loading
+    return num / den
+
+
+def column_gain(gp: jax.Array, gn: jax.Array) -> jax.Array:
+    """The per-column divider loading Σ(σ⁺+σ⁻) — Eq. 3's denominator."""
+    return jnp.sum(gp + gn, axis=0)
+
+
+def effective_weights(gp: jax.Array, gn: jax.Array,
+                      r_seg: float = 0.0) -> jax.Array:
+    """The float weight matrix Eq. 3 actually implements:
+    W_eff[i, j] = (σ⁺−σ⁻)[i, j] / Σ_i(σ⁺+σ⁻)[j]."""
+    if r_seg:
+        att = wire_attenuation(gp.shape[0], gp.shape[1],
+                               float(DEFAULT_DEVICE.g_on), r_seg)
+        gp = gp * att
+        gn = gn * att
+    return (gp - gn) / jnp.sum(gp + gn, axis=0, keepdims=True)
+
+
+# --------------------------------------------------------------------- #
+# weight-matrix → crossbar programming targets
+# --------------------------------------------------------------------- #
+def pairs_from_weights(w: jax.Array, device: DeviceModel = DEFAULT_DEVICE,
+                       quantize: bool = True
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Map a float weight tile (M, N) onto differential pairs.
+
+    Weights are normalized per-tile to max|w| (the DAC/column sense can
+    absorb a scalar), then encoded as (σ⁺, σ⁻) with the complementary
+    device parked at G_OFF. Returns (gp, gn, scale) with
+      w ≈ scale · gain · W_eff     (gain = column_gain / g_range)
+    so callers can undo the divider when the activation is not a
+    threshold.
+    """
+    amax = jnp.maximum(jnp.max(jnp.abs(w)), 1e-12)
+    gp, gn = device.pair_from_weight(w / amax)
+    if quantize:
+        gp = device.quantize_g(gp)
+        gn = device.quantize_g(gn)
+    return gp, gn, amax
+
+
+def crossbar_forward(x: jax.Array, w: jax.Array, *,
+                     device: DeviceModel = DEFAULT_DEVICE,
+                     r_seg: float = 0.0, quantize: bool = True,
+                     compensate_gain: bool = True) -> jax.Array:
+    """End-to-end: float weights → pairs → Eq. 3 → (optionally) de-gained
+    dot product. This is the single-tile reference the kernels, the
+    mapper and the app benchmarks all share.
+    """
+    gp, gn, scale = pairs_from_weights(w, device, quantize)
+    dp = eq3_dot_product(x, gp, gn, r_seg)
+    if compensate_gain:
+        den = column_gain(gp, gn)
+        dp = dp * den / device.g_range * scale
+    return dp

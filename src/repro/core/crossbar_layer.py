@@ -1,0 +1,207 @@
+"""Crossbar-mode execution of arbitrary linear layers.
+
+Bridges the paper's fixed-geometry cores and real model layers: a float
+weight matrix (d_in × d_out) is tiled into crossbar-geometry tiles
+(rows × cols), each tile becomes a differential conductance pair (with
+optional quantization, programming noise and wire resistance), and the
+layer evaluates as
+
+  per column-tile j:  Σ over row-chunks c of  Eq3(x_c, tile_cj) · gain_cj
+
+— the float-domain equivalent of Fig. 11's combining neurons (the
+combiner's weights are the de-gain factors, which is why the paper can
+train them like any other neuron). The public entry points:
+
+  crossbar_linear   — functional layer: x @ W through tiled crossbars
+  CrossbarParams    — precomputed tiles/scales (programmed chip state)
+  digital_linear    — the SRAM core counterpart: int8 MAC + requantize
+
+`kernels/crossbar_mvm` implements the same tile evaluation as a fused
+Pallas kernel; `ops.use_kernel()` routes through it. This module is the
+pure-jnp oracle and the API the examples and the QAT trainer use.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as q
+from repro.core.crossbar import (column_gain, eq3_dot_product,
+                                 pairs_from_weights, wire_attenuation)
+from repro.core.device import DeviceModel, DEFAULT_DEVICE
+from repro.core.neural_core import CoreGeometry, MEMRISTOR_GEOM
+
+
+def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    return jnp.pad(x, ((0, rows - x.shape[0]), (0, cols - x.shape[1])))
+
+
+class CrossbarParams(NamedTuple):
+    """Programmed chip state for one linear layer."""
+    gp: jax.Array       # (R, C, rows, cols) conductance tiles
+    gn: jax.Array
+    descale: jax.Array  # (R, C, cols) — undoes Eq.3's divider per tile
+    d_in: int
+    d_out: int
+    geom_rows: int
+    geom_cols: int
+
+
+def program_layer(w: jax.Array, *, geom: CoreGeometry = MEMRISTOR_GEOM,
+                  device: DeviceModel = DEFAULT_DEVICE,
+                  quantize: bool = True,
+                  noise_key: Optional[jax.Array] = None,
+                  noise_tol: float = 1.0 / 256.0) -> CrossbarParams:
+    """Tile + differential-encode + (optionally) perturb like the
+    feedback-write residual. w: (d_in, d_out) float."""
+    d_in, d_out = w.shape
+    R = math.ceil(d_in / geom.rows)
+    C = math.ceil(d_out / geom.cols)
+    wp = _pad_to(w, R * geom.rows, C * geom.cols)
+    tiles = wp.reshape(R, geom.rows, C, geom.cols).transpose(0, 2, 1, 3)
+
+    def enc(tile):
+        gp, gn, scale = pairs_from_weights(tile, device, quantize)
+        den = column_gain(gp, gn)
+        descale = scale * den / device.g_range
+        return gp, gn, descale
+
+    gp, gn, descale = jax.vmap(jax.vmap(enc))(tiles)
+    if noise_key is not None:
+        from repro.core.programming import ProgrammingConfig, \
+            programming_noise
+        cfg = ProgrammingConfig(tol_frac=noise_tol, device=device)
+        kp, kn = jax.random.split(noise_key)
+        gp = device.clip(gp + programming_noise(kp, gp.shape, cfg))
+        gn = device.clip(gn + programming_noise(kn, gn.shape, cfg))
+        # re-derive the descale from the *intended* state: the chip's
+        # downstream scales are fixed at program time (the residual is
+        # the accuracy cost the paper's tolerance bound accepts)
+    return CrossbarParams(gp, gn, descale, d_in, d_out,
+                          geom.rows, geom.cols)
+
+
+def crossbar_apply(params: CrossbarParams, x: jax.Array, *,
+                   r_seg: float = 0.0,
+                   activation: str = "linear",
+                   use_kernel: bool = False) -> jax.Array:
+    """Evaluate the programmed layer: x (..., d_in) → (..., d_out)."""
+    R, C = params.gp.shape[0], params.gp.shape[1]
+    rows, cols = params.geom_rows, params.geom_cols
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    xp = jnp.pad(xf, ((0, 0), (0, R * rows - params.d_in)))
+    xt = xp.reshape(-1, R, rows)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+        out = kops.crossbar_mvm(xt, params.gp, params.gn, params.descale,
+                                r_seg=r_seg)
+    else:
+        def tile_eval(xc, gp, gn, descale):
+            # xc: (B, rows); gp/gn: (rows, cols)
+            return eq3_dot_product(xc, gp, gn, r_seg) * descale
+
+        # (R, C) tile grid: vmap columns, sum row-chunks (the Fig. 11
+        # combining step in the float domain)
+        def col_eval(c):
+            parts = jax.vmap(tile_eval, in_axes=(1, 0, 0, 0))(
+                xt, params.gp[:, c], params.gn[:, c], params.descale[:, c])
+            return jnp.sum(parts, axis=0)  # (B, cols)
+
+        out = jnp.concatenate([col_eval(c) for c in range(C)], axis=-1)
+    out = out[:, :params.d_out]
+    out = q.make_activation(activation)(out)
+    return out.reshape(*lead, params.d_out).astype(x.dtype)
+
+
+def crossbar_linear(x: jax.Array, w: jax.Array, *,
+                    geom: CoreGeometry = MEMRISTOR_GEOM,
+                    device: DeviceModel = DEFAULT_DEVICE,
+                    quantize: bool = True, r_seg: float = 0.0,
+                    activation: str = "linear",
+                    noise_key: Optional[jax.Array] = None,
+                    use_kernel: bool = False) -> jax.Array:
+    """One-shot convenience: program + apply (tests, small models)."""
+    params = program_layer(w, geom=geom, device=device, quantize=quantize,
+                           noise_key=noise_key)
+    return crossbar_apply(params, x, r_seg=r_seg, activation=activation,
+                          use_kernel=use_kernel)
+
+
+# --------------------------------------------------------------------- #
+# the digital (SRAM) core counterpart
+# --------------------------------------------------------------------- #
+def digital_linear(x: jax.Array, w: jax.Array, *, bits: int = 8,
+                   activation: str = "linear",
+                   use_kernel: bool = False) -> jax.Array:
+    """SRAM-core execution: int8 weights × int8 inputs → int32
+    accumulate → float descale → activation (the §II.A datapath)."""
+    wq, ws = q.quantize_weights(w, bits=bits, per_column=True)
+    lo, hi = -1.0, 1.0
+    n = 2.0 ** bits - 1.0
+    step = (hi - lo) / n
+    xq = jnp.clip(jnp.round((x.astype(jnp.float32) - lo) / step), 0, n)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        acc = kops.int8_matmul(xq.astype(jnp.uint8), wq)
+    else:
+        acc = xq.astype(jnp.int32) @ wq.astype(jnp.int32)
+    out = (acc.astype(jnp.float32) * step + lo *
+           jnp.sum(wq, axis=0).astype(jnp.float32)) * ws.reshape(-1)
+    out = q.make_activation(activation)(out)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# QAT-trained MLP in crossbar mode (the paper's app networks)
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class MLPSpec:
+    dims: Tuple[int, ...]
+    activation: str = "threshold"    # hidden activation (memristor)
+    out_activation: str = "linear"
+
+
+def mlp_init(key: jax.Array, spec: MLPSpec):
+    params = []
+    for i in range(len(spec.dims) - 1):
+        key, k = jax.random.split(key)
+        fan = spec.dims[i]
+        params.append({
+            "w": jax.random.normal(k, (spec.dims[i], spec.dims[i + 1]),
+                                   jnp.float32) / jnp.sqrt(fan),
+            "b": jnp.zeros((spec.dims[i + 1],), jnp.float32),
+        })
+    return params
+
+
+def mlp_apply(params, x: jax.Array, spec: MLPSpec, *,
+              weight_bits: int = 8, act_bits: int = 8,
+              mode: str = "float") -> jax.Array:
+    """mode: float | qat | crossbar | digital — the Fig. 12 sweep axes."""
+    h = x
+    n = len(params)
+    for i, p in enumerate(params):
+        act = spec.activation if i < n - 1 else spec.out_activation
+        if mode == "crossbar":
+            h = crossbar_linear(h, p["w"]) + p["b"]
+            h = q.make_activation(act)(h)
+        elif mode == "digital":
+            h = digital_linear(h, p["w"]) + p["b"]
+            h = q.make_activation(act)(h)
+        elif mode == "qat":
+            w = q.fake_quant(p["w"], bits=weight_bits, per_column=True)
+            h = h @ w + p["b"]
+            h = q.make_activation(act)(h)
+            if i < n - 1:
+                h = q.fake_quant_act(h, bits=act_bits)
+        else:
+            h = h @ p["w"] + p["b"]
+            h = q.make_activation(act)(h)
+    return h

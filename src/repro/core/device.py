@@ -1,0 +1,98 @@
+"""Memristor device model (paper section IV.A).
+
+The paper simulates the two-terminal resistive switch of Lu et al.
+[22] through the Yakopcic SPICE model [21]. What determines *system*
+numbers (precision, programming convergence, crossbar transfer
+characteristics) is the device's conductance range, its write-response
+variability and the read path — not the analog transient waveforms —
+so that is what we model (DESIGN.md §8.2):
+
+  R_on  = 125 kΩ         (minimum resistance, from [22])
+  ratio = 1000           (R_off = 125 MΩ)
+  full-range switch      80 ns @ 4.25 V
+  precision              ~7 bits per device [20]; 2 devices/synapse → ~8b
+
+Conductances are therefore in [G_OFF, G_ON] = [8 nS, 8 µS]. A synapse
+is a *differential pair* (σ⁺, σ⁻); its weight is σ⁺ − σ⁻ scaled by the
+pair range, giving signed weights from strictly positive devices — the
+paper's answer to [14]'s positive-only design.
+
+Device-to-device variation is modeled as a lognormal multiplier on the
+per-pulse conductance increment (programming is feedback-write, so
+variation costs pulses, not accuracy — section III.D), plus a small
+read/programming residual handled in ``programming.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# -- published device constants (Lu et al. [22] via Yakopcic model [21]) --
+R_ON_OHM = 125e3
+R_RATIO = 1000.0
+R_OFF_OHM = R_ON_OHM * R_RATIO
+G_ON = 1.0 / R_ON_OHM          # 8 µS
+G_OFF = 1.0 / R_OFF_OHM        # 8 nS
+SWITCH_TIME_S = 80e-9          # full-range switch
+SWITCH_VOLT = 4.25
+DEVICE_BITS = 7                # achievable per-device precision [20]
+
+# Yakopcic model parameters used for Fig. 10 (recorded for provenance;
+# the transfer characteristics above are what the system model consumes).
+YAKOPCIC_PARAMS = dict(Vp=4.0, Vn=4.0, Ap=816000.0, An=816000.0,
+                       xp=0.9897, xn=0.9897, ap=0.2, an=0.2)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceModel:
+    """Conductance-domain view of the memristor device."""
+    g_on: float = G_ON
+    g_off: float = G_OFF
+    bits: int = DEVICE_BITS
+    # lognormal sigma of the per-pulse response multiplier (device-to-
+    # device variation; identical pulses ≠ identical ΔR — section III.D).
+    write_sigma: float = 0.15
+    # ADC-referred read noise during feedback write (1T1M read, Fig. 9),
+    # as a fraction of the full conductance range — a 10-bit readout
+    # chain referenced to G_ON (§III.D uses one shared ADC per core).
+    read_sigma: float = 1.0 / 1024.0
+
+    @property
+    def g_range(self) -> float:
+        return self.g_on - self.g_off
+
+    @property
+    def levels(self) -> int:
+        return 2 ** self.bits
+
+    def clip(self, g: jax.Array) -> jax.Array:
+        return jnp.clip(g, self.g_off, self.g_on)
+
+    # -- weight <-> differential conductance pair ----------------------- #
+    def pair_from_weight(self, w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """Signed weight in [-1, 1] → (σ⁺, σ⁻), one device at G_OFF.
+
+        The standard differential encoding: a positive weight raises σ⁺
+        above the floor, a negative weight raises σ⁻. Using the floor for
+        the complementary device maximizes the usable range and minimizes
+        the Eq. 3 denominator loading.
+        """
+        w = jnp.clip(w, -1.0, 1.0)
+        mag = jnp.abs(w) * self.g_range
+        gp = jnp.where(w >= 0, self.g_off + mag, self.g_off)
+        gn = jnp.where(w >= 0, self.g_off, self.g_off + mag)
+        return gp, gn
+
+    def weight_from_pair(self, gp: jax.Array, gn: jax.Array) -> jax.Array:
+        return (gp - gn) / self.g_range
+
+    def quantize_g(self, g: jax.Array) -> jax.Array:
+        """Snap conductance to the device's programmable levels."""
+        step = self.g_range / (self.levels - 1)
+        return self.g_off + jnp.round((g - self.g_off) / step) * step
+
+
+DEFAULT_DEVICE = DeviceModel()

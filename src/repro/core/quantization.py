@@ -1,0 +1,145 @@
+"""8-bit quantization: weights, activations, DAC/LUT (paper §II.A, §V.A).
+
+The SRAM digital core stores 8-bit synapses and streams 8-bit inputs;
+the memristor core realizes ~8 bits from a differential device pair and
+receives inputs through 8-bit DACs. Both are *ex-situ* trained: training
+happens off-chip in float (or quantization-aware float), then weights are
+programmed once. We provide:
+
+  quantize_weights / dequantize  — symmetric per-tensor (or per-column)
+                                   int8 weight quantization
+  fake_quant                     — straight-through-estimator fake quant
+                                   for QAT (optim/qat.py wires this in)
+  quantize_activations           — unsigned 8-bit input quantization (the
+                                   DAC transfer function)
+  activation LUTs                — the digital core's 256-entry activation
+                                   lookup table (sigmoid / tanh-like), and
+                                   the memristor threshold (inverter pair)
+
+Everything is pure jnp and jit-safe; the same functions drive the Fig.12
+bit-width sweep, the cost model, and crossbar-mode layer execution.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------- #
+# weights
+# --------------------------------------------------------------------- #
+def weight_scale(w: jax.Array, bits: int = 8, per_column: bool = False,
+                 eps: float = 1e-12) -> jax.Array:
+    """Symmetric quantization scale: max|w| maps to the top code."""
+    qmax = 2.0 ** (bits - 1) - 1.0
+    amax = jnp.max(jnp.abs(w), axis=0, keepdims=True) if per_column \
+        else jnp.max(jnp.abs(w))
+    return jnp.maximum(amax, eps) / qmax
+
+
+def quantize_weights(w: jax.Array, bits: int = 8, per_column: bool = False
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """float weights → (int codes, scale). codes ∈ [-qmax, qmax]."""
+    qmax = 2.0 ** (bits - 1) - 1.0
+    s = weight_scale(w, bits, per_column)
+    q = jnp.clip(jnp.round(w / s), -qmax, qmax)
+    return q.astype(jnp.int8 if bits <= 8 else jnp.int32), s
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def fake_quant(w: jax.Array, bits: int = 8, per_column: bool = False
+               ) -> jax.Array:
+    """Straight-through fake quantization (QAT forward = quantized,
+    backward = identity)."""
+    qmax = 2.0 ** (bits - 1) - 1.0
+    s = weight_scale(jax.lax.stop_gradient(w), bits, per_column)
+    wq = jnp.clip(jnp.round(w / s), -qmax, qmax) * s
+    return w + jax.lax.stop_gradient(wq - w)
+
+
+# --------------------------------------------------------------------- #
+# activations (inputs): the DAC transfer function
+# --------------------------------------------------------------------- #
+def quantize_activations(x: jax.Array, bits: int = 8, lo: float = 0.0,
+                         hi: float = 1.0) -> Tuple[jax.Array, float, float]:
+    """Uniform input quantization to ``bits`` codes over [lo, hi].
+
+    The sensor interface delivers 8-bit samples; first-layer cores run
+    them through DACs (Fig. 8). Returns (codes, lo, step).
+    """
+    n = 2 ** bits - 1
+    step = (hi - lo) / n
+    q = jnp.clip(jnp.round((x - lo) / step), 0, n)
+    return q.astype(jnp.uint8 if bits <= 8 else jnp.int32), lo, step
+
+
+def dac(codes: jax.Array, lo: float, step: float) -> jax.Array:
+    """codes → analog voltage (the DAC output applied to crossbar rows)."""
+    return codes.astype(jnp.float32) * step + lo
+
+
+def fake_quant_act(x: jax.Array, bits: int = 8, lo: float = -1.0,
+                   hi: float = 1.0) -> jax.Array:
+    """STE fake quantization of activations (for QAT + Fig. 12 sweep)."""
+    n = 2.0 ** bits - 1.0
+    step = (hi - lo) / n
+    xq = jnp.clip(jnp.round((x - lo) / step), 0.0, n) * step + lo
+    return x + jax.lax.stop_gradient(xq - x)
+
+
+# --------------------------------------------------------------------- #
+# activation functions: LUT (digital core) & threshold (memristor core)
+# --------------------------------------------------------------------- #
+def threshold(x: jax.Array) -> jax.Array:
+    """Memristor core activation: back-to-back inverter pair (Fig. 5).
+
+    Output rails are ±1 V (V_DD/V_SS); an ideal comparator on DP_j.
+    """
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def threshold_ste(x: jax.Array, slope: float = 4.0) -> jax.Array:
+    """Trainable surrogate: hard threshold forward, steep-tanh backward.
+    Used when ex-situ training targets the threshold-activation system."""
+    soft = jnp.tanh(slope * x)
+    return soft + jax.lax.stop_gradient(threshold(x) - soft)
+
+
+def sigmoid_lut(bits: int = 8, lo: float = -8.0, hi: float = 8.0
+                ) -> jax.Array:
+    """The digital core's activation LUT: 2^bits entries of σ(x)∈[0,1]
+    stored as ``bits``-bit codes (256 bytes for 8 bits — §V.A)."""
+    n = 2 ** bits
+    xs = jnp.linspace(lo, hi, n)
+    ys = jax.nn.sigmoid(xs)
+    return jnp.round(ys * (n - 1)).astype(jnp.int32)
+
+
+def apply_lut(acc: jax.Array, lut: jax.Array, in_lo: float = -8.0,
+              in_hi: float = 8.0) -> jax.Array:
+    """Digital-core activation: index the LUT with the (rescaled)
+    accumulator; returns codes in [0, 2^bits-1]."""
+    n = lut.shape[0]
+    idx = jnp.clip(jnp.round((acc - in_lo) / (in_hi - in_lo) * (n - 1)),
+                   0, n - 1).astype(jnp.int32)
+    return lut[idx]
+
+
+def make_activation(kind: str) -> Callable[[jax.Array], jax.Array]:
+    """Float-domain activation used by trainers & oracles.
+
+    'threshold' — memristor inverter pair; 'sigmoid' — digital LUT target;
+    'tanh' — the paper's f(x) example family; 'linear' — combiner neurons
+    (Fig. 11 splitting keeps sub-neuron sums linear until the top neuron).
+    """
+    return {
+        "threshold": threshold_ste,
+        "sigmoid": jax.nn.sigmoid,
+        "tanh": jnp.tanh,
+        "linear": lambda x: x,
+    }[kind]

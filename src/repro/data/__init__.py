@@ -1,0 +1,3 @@
+from repro.data.pipeline import TokenPipeline, PipelineState
+from repro.data.images import (mnist_like, cifar_like, chars_like,
+                               sensor_stream)

@@ -1,0 +1,100 @@
+"""Procedural image datasets — stand-ins for MNIST / CIFAR-10 / Chars74K.
+
+The real datasets are not available offline (DESIGN.md §8.1), so each
+stand-in generates class-conditional structured images with the *same
+dimensions and class counts* as the original. Classes are separable but
+not trivially so (class-dependent oriented gratings + blobs + noise),
+which is what the Fig. 12 precision sweep needs: a task where accuracy
+degrades measurably as weights/activations lose bits.
+
+All generators are pure functions of (seed, index) — the data pipeline
+rule — and emit flat float vectors in [0, 1] plus int labels.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _grating(h: int, w: int, theta: float, freq: float,
+             phase: float) -> jax.Array:
+    y, x = jnp.mgrid[0:h, 0:w]
+    u = (x * jnp.cos(theta) + y * jnp.sin(theta)) / max(h, w)
+    return 0.5 + 0.5 * jnp.sin(2 * jnp.pi * freq * u + phase)
+
+
+def _blob(h: int, w: int, cy: float, cx: float, sigma: float) -> jax.Array:
+    y, x = jnp.mgrid[0:h, 0:w]
+    return jnp.exp(-(((y / h - cy) ** 2 + (x / w - cx) ** 2)
+                     / (2 * sigma ** 2)))
+
+
+def _class_image(key, label: jax.Array, h: int, w: int,
+                 n_classes: int, noise: float) -> jax.Array:
+    """One (h, w) image whose structure is a deterministic function of
+    the label, with sample-specific jitter + noise."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    lab = label.astype(jnp.float32)
+    theta = lab * (jnp.pi / n_classes) + \
+        0.1 * jax.random.normal(k1, ())
+    freq = 2.0 + (lab % 5.0) + 0.2 * jax.random.normal(k2, ())
+    cy = 0.25 + 0.5 * ((lab * 7919.0) % n_classes) / n_classes
+    cx = 0.25 + 0.5 * ((lab * 104729.0) % n_classes) / n_classes
+    img = 0.6 * _grating(h, w, theta, freq, 0.0) \
+        + 0.4 * _blob(h, w, cy, cx, 0.12)
+    img = img + noise * jax.random.normal(k3, (h, w))
+    return jnp.clip(img, 0.0, 1.0)
+
+
+def _dataset(seed: int, n: int, h: int, w: int, channels: int,
+             n_classes: int, noise: float
+             ) -> Tuple[jax.Array, jax.Array]:
+    key = jax.random.PRNGKey(seed)
+    k_lab, k_img = jax.random.split(key)
+    labels = jax.random.randint(k_lab, (n,), 0, n_classes, jnp.int32)
+    keys = jax.random.split(k_img, n * channels).reshape(n, channels, 2)
+
+    def one(keys_c, lab):
+        chans = jax.vmap(lambda k: _class_image(k, lab, h, w,
+                                                n_classes, noise))(keys_c)
+        return chans.reshape(-1)  # (channels*h*w,)
+
+    xs = jax.vmap(one)(keys, labels)
+    return xs, labels
+
+
+def mnist_like(seed: int = 0, n: int = 1024
+               ) -> Tuple[jax.Array, jax.Array]:
+    """28×28 grayscale, 10 classes → (n, 784) in [0,1]."""
+    return _dataset(seed, n, 28, 28, 1, 10, noise=0.10)
+
+
+def cifar_like(seed: int = 0, n: int = 1024
+               ) -> Tuple[jax.Array, jax.Array]:
+    """32×32×3 color, 10 classes → (n, 3072)."""
+    return _dataset(seed, n, 32, 32, 3, 10, noise=0.15)
+
+
+def chars_like(seed: int = 0, n: int = 1024
+               ) -> Tuple[jax.Array, jax.Array]:
+    """50×50 grayscale, 26 classes (subsampled Chars74K) → (n, 2500)."""
+    return _dataset(seed, n, 50, 50, 1, 26, noise=0.08)
+
+
+def sensor_stream(seed: int, frames: int, h: int = 64, w: int = 64
+                  ) -> jax.Array:
+    """A moving-pattern frame stream for the edge/motion pipelines:
+    (frames, h, w) in [0,1] with per-frame translation (real motion)."""
+    key = jax.random.PRNGKey(seed)
+    base = _grating(h, w, 0.6, 4.0, 0.0) * 0.7 \
+        + 0.3 * _blob(h, w, 0.5, 0.5, 0.2)
+    vel = jax.random.uniform(key, (2,), minval=1.0, maxval=3.0)
+
+    def frame(i):
+        return jnp.roll(jnp.roll(base, (i * vel[0]).astype(jnp.int32),
+                                 axis=0),
+                        (i * vel[1]).astype(jnp.int32), axis=1)
+
+    return jax.vmap(frame)(jnp.arange(frames))

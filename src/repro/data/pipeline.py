@@ -1,0 +1,100 @@
+"""Deterministic, shardable, checkpointable data pipeline.
+
+Design rule (the one that makes fault tolerance and elasticity trivial):
+a batch is a *pure function* of ``(seed, step)``. The pipeline carries
+no hidden iterator state — its checkpoint is two integers, restore is
+exact on any process count, and an elastic re-mesh (different DP degree)
+still yields the same global batch at the same step because sharding
+happens by slicing the same deterministic global batch.
+
+The token stream is procedural (no corpora ship in this container):
+a seeded Zipf unigram mixture with short-range Markov structure, giving
+a learnable next-token distribution (loss drops well below the uniform
+floor within a few hundred steps — see examples/quickstart.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineState:
+    seed: int
+    step: int
+
+    def as_dict(self) -> Dict[str, int]:
+        return {"seed": self.seed, "step": self.step}
+
+    @staticmethod
+    def from_dict(d) -> "PipelineState":
+        return PipelineState(int(d["seed"]), int(d["step"]))
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPipeline:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    # Markov structure: token t+1 ~ mix of Zipf unigram and a shift of t
+    markov_mix: float = 0.7
+    zipf_a: float = 1.2
+
+    def state(self, step: int) -> PipelineState:
+        return PipelineState(self.seed, step)
+
+    def _zipf_sample(self, key, shape):
+        """Inverse-CDF Zipf over the vocab (bounded, jit-safe)."""
+        u = jax.random.uniform(key, shape, minval=1e-6, maxval=1.0)
+        # approximate bounded-Zipf inverse CDF: ranks ∝ u^(-1/(a-1))
+        r = jnp.power(u, -1.0 / (self.zipf_a - 1.0))
+        toks = jnp.clip(r.astype(jnp.int32) - 1, 0, self.vocab_size - 1)
+        return toks
+
+    def batch(self, step: int) -> Dict[str, jax.Array]:
+        """Global batch for ``step`` — pure, deterministic."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        k1, k2, k3 = jax.random.split(key, 3)
+        B, S = self.global_batch, self.seq_len
+        uni = self._zipf_sample(k1, (B, S + 1))
+        # Markov component: next token = (prev * 31 + 7) mod vocab
+        use_markov = jax.random.uniform(k2, (B, S + 1)) < self.markov_mix
+
+        def chain(prev, inp):
+            u, m = inp
+            nxt = jnp.where(m, (prev * 31 + 7) % self.vocab_size, u)
+            return nxt, nxt
+
+        first = uni[:, 0]
+        _, rest = jax.lax.scan(chain, first,
+                               (uni[:, 1:].T, use_markov[:, 1:].T))
+        toks = jnp.concatenate([first[:, None], rest.T], axis=1)
+        return {"tokens": toks[:, :S].astype(jnp.int32),
+                "labels": toks[:, 1:].astype(jnp.int32)}
+
+    def host_shard(self, batch: Dict[str, jax.Array], process_index: int,
+                   process_count: int) -> Dict[str, jax.Array]:
+        """Slice the deterministic global batch for one host. Elastic
+        re-meshing = calling this with a different process_count."""
+        B = self.global_batch
+        assert B % process_count == 0
+        per = B // process_count
+        lo = process_index * per
+        return jax.tree.map(lambda x: x[lo:lo + per], batch)
+
+
+def embeds_batch(key, batch: int, seq: int, d_model: int,
+                 vocab: int) -> Dict[str, jax.Array]:
+    """Frontend-stub batch for vlm/audio architectures: precomputed
+    frame/patch embeddings (per the assignment's input_specs note)."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "embeds": jax.random.normal(k1, (batch, seq, d_model),
+                                    jnp.bfloat16),
+        "labels": jax.random.randint(k2, (batch, seq), 0, vocab,
+                                     jnp.int32),
+    }

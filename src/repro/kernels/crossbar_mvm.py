@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: tiled differential-pair crossbar MVM (Eq. 3).
+
+Hardware adaptation (DESIGN.md §2): the paper's analog crossbar
+evaluates a whole weight-stationary tile in one step; the TPU-native
+equivalent is an MXU pass over a VMEM-resident tile. The kernel fuses
+the three stages the analog circuit performs in one shot:
+
+  1. differential combine     w = σ⁺ − σ⁻          (VPU, elementwise)
+  2. dot product              num = x @ w           (MXU)
+  3. divider normalization    out += num·descale/Σ(σ⁺+σ⁻)   (VPU)
+
+so the conductance pair never round-trips to HBM between stages.
+
+Grid = (B-blocks, column-tiles, row-chunks); the row-chunk axis is the
+reduction (Fig. 11 combining) and runs innermost, accumulating into the
+output block, which stays resident in VMEM across the reduction
+("revisiting" schedule). Tile geometry mirrors the paper's crossbar
+cores: rows=128 is MXU-aligned; cols=64 is the paper's geometry (the
+beyond-paper 128×128 geometry fills MXU lanes — see EXPERIMENTS.md).
+
+VMEM budget per step (f32): x (Bt·rows) + gp,gn (2·rows·cols) + out
+(Bt·cols) ≈ 4·(128·128·3) B ≈ 200 KiB at Bt=128 — comfortably inside
+the ~16 MiB VMEM of a v5e core, leaving room for double-buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, gp_ref, gn_ref, descale_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[:, 0, :]    # (Bt, rows)
+    gp = gp_ref[0, 0]     # (rows, cols)
+    gn = gn_ref[0, 0]
+    descale = descale_ref[0, 0]  # (cols,)
+
+    w = gp - gn
+    den = jnp.sum(gp + gn, axis=0)                  # (cols,)
+    num = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    o_ref[:, 0, :] += num * (descale / den)[None, :]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_b", "interpret"))
+def crossbar_mvm(x: jax.Array, gp: jax.Array, gn: jax.Array,
+                 descale: jax.Array, *, block_b: int = 128,
+                 interpret: bool = False) -> jax.Array:
+    """x: (B, R, rows) f32; gp/gn: (R, C, rows, cols) f32;
+    descale: (R, C, cols) f32 → (B, C*cols) f32."""
+    B, R, rows = x.shape
+    _, C, _, cols = gp.shape
+    bt = min(block_b, B)
+    pad_b = (-B) % bt
+    if pad_b:
+        # partial-block contents are unspecified in Pallas; keep the
+        # batch dim an exact multiple so every read is in-bounds.
+        x = jnp.pad(x, ((0, pad_b), (0, 0), (0, 0)))
+    nb = x.shape[0] // bt
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(nb, C, R),
+        in_specs=[
+            pl.BlockSpec((bt, 1, rows), lambda b, c, r: (b, r, 0)),
+            pl.BlockSpec((1, 1, rows, cols), lambda b, c, r: (r, c, 0, 0)),
+            pl.BlockSpec((1, 1, rows, cols), lambda b, c, r: (r, c, 0, 0)),
+            pl.BlockSpec((1, 1, cols), lambda b, c, r: (r, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, 1, cols), lambda b, c, r: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], C, cols), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), gp.astype(jnp.float32),
+      gn.astype(jnp.float32), descale.astype(jnp.float32))
+    return out[:B].reshape(B, C * cols)

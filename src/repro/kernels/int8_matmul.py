@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: the SRAM digital core's int8 MAC array (§II.A).
+
+The digital core multiplies 8-bit synapses with 8-bit inputs into
+32-bit accumulators, all neurons in parallel. On TPU that is an
+int8×int8→int32 MXU pass; the kernel keeps a (K-blocked) int32
+accumulator resident in VMEM, mirroring the core's accumulator bank.
+
+Grid = (B-blocks, N-blocks, K-blocks); K innermost (reduction). Block
+shapes default to MXU-native 128 tiles (a digital core *is* a
+256×128 array — exactly two K-blocks by one N-block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    o_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def _pad_dim(a: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)  # zero pad: contributes 0 to the MAC
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_b", "block_n", "block_k",
+                                    "interpret"))
+def int8_matmul(x: jax.Array, w: jax.Array, *, block_b: int = 128,
+                block_n: int = 128, block_k: int = 256,
+                interpret: bool = False) -> jax.Array:
+    """x: (B, K) int8/uint8; w: (K, N) int8 → (B, N) int32."""
+    B, K = x.shape
+    _, N = w.shape
+    bb, bn, bk = min(block_b, B), min(block_n, N), min(block_k, K)
+    # pad every dim to a block multiple: partial-block contents are
+    # unspecified in Pallas, and a ragged K reduction would otherwise
+    # accumulate garbage.
+    xp = _pad_dim(_pad_dim(x, 0, bb), 1, bk)
+    wp = _pad_dim(_pad_dim(w, 0, bk), 1, bn)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(xp.shape[0] // bb, wp.shape[1] // bn, xp.shape[1] // bk),
+        in_specs=[
+            pl.BlockSpec((bb, bk), lambda b, n, k: (b, k)),
+            pl.BlockSpec((bk, bn), lambda b, n, k: (k, n)),
+        ],
+        out_specs=pl.BlockSpec((bb, bn), lambda b, n, k: (b, n)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]),
+                                       jnp.int32),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:B, :N]

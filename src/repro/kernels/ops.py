@@ -1,0 +1,53 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Handle padding to block multiples, dtype plumbing and the CPU fallback:
+on the CPU backend (this container, CI) kernels run in ``interpret=True``
+mode — the kernel body executes in Python with the same block schedule,
+which is exactly what the per-kernel allclose tests validate against
+``ref.py``. On TPU the same calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import crossbar_mvm as _cb
+from repro.kernels import int8_matmul as _i8
+from repro.kernels import ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def crossbar_mvm(x: jax.Array, gp: jax.Array, gn: jax.Array,
+                 descale: jax.Array, *, r_seg: float = 0.0,
+                 block_b: int = 128) -> jax.Array:
+    """Tiled differential crossbar MVM. x: (B, R, rows);
+    gp/gn: (R, C, rows, cols); descale: (R, C, cols) → (B, C·cols).
+
+    Wire-resistance correction (r_seg > 0) is a program-time transform
+    of the conductances, so it is applied to the operands here — the
+    kernel itself always computes the ideal Eq. 3.
+    """
+    if r_seg:
+        from repro.core.crossbar import wire_attenuation
+        from repro.core.device import DEFAULT_DEVICE
+        att = wire_attenuation(gp.shape[2], gp.shape[3],
+                               float(DEFAULT_DEVICE.g_on), r_seg)
+        gp = gp * att
+        gn = gn * att
+    return _cb.crossbar_mvm(x, gp, gn, descale, block_b=block_b,
+                            interpret=_interpret())
+
+
+def int8_matmul(x: jax.Array, w: jax.Array, *, block_b: int = 128,
+                block_n: int = 128, block_k: int = 256) -> jax.Array:
+    """int8×int8→int32 MAC array (the SRAM digital core datapath)."""
+    return _i8.int8_matmul(x, w, block_b=block_b, block_n=block_n,
+                           block_k=block_k, interpret=_interpret())
+
+
+# re-export oracles for tests/benchmarks
+crossbar_mvm_ref = ref.crossbar_mvm_ref
+int8_matmul_ref = ref.int8_matmul_ref

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These define the semantics the kernels must match bit-for-bit (up to
+float accumulation order): the tiled differential-pair crossbar MVM
+(Eq. 3 per tile + Fig. 11 combining over row-chunks) and the SRAM
+digital core's int8 MAC array.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def crossbar_mvm_ref(x: jax.Array, gp: jax.Array, gn: jax.Array,
+                     descale: jax.Array) -> jax.Array:
+    """x: (B, R, rows); gp/gn: (R, C, rows, cols); descale: (R, C, cols)
+    → (B, C*cols).
+
+    Per tile: DP = (x_r @ (gp−gn)) / Σ(gp+gn)   (Eq. 3)
+    then de-gained by `descale` and summed over row-chunks r (the
+    combining step of Fig. 11 in the float domain).
+    """
+    w = (gp - gn).astype(jnp.float32)                       # (R,C,rows,cols)
+    den = jnp.sum((gp + gn).astype(jnp.float32), axis=2)    # (R,C,cols)
+    num = jnp.einsum("brk,rckn->brcn", x.astype(jnp.float32), w)
+    out = jnp.sum(num / den[None] * descale[None], axis=1)  # (B,C,cols)
+    return out.reshape(x.shape[0], -1)
+
+
+def int8_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B, K) int8/uint8 codes; w: (K, N) int8 → (B, N) int32."""
+    return jnp.dot(x.astype(jnp.int32), w.astype(jnp.int32))

@@ -1,0 +1,48 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — smoke tests must keep seeing one
+CPU device.
+
+Mesh axes:
+  pod   — inter-pod data parallelism (parameters replicated across pods;
+          the only cross-pod traffic is the gradient all-reduce)
+  data  — intra-pod data parallel + FSDP (weights' d_model dim)
+  model — tensor/expert/sequence parallel
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(n_devices: Optional[int] = None, model: int = 2):
+    """Small mesh over however many (host) devices exist — for tests."""
+    n = n_devices or len(jax.devices())
+    model = math.gcd(model, n)
+    return jax.make_mesh(
+        (n // model, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def mesh_axis_sizes(mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def dp_degree(mesh) -> int:
+    sizes = mesh_axis_sizes(mesh)
+    return sizes.get("data", 1) * sizes.get("pod", 1)
+
+
+def tp_degree(mesh) -> int:
+    return mesh_axis_sizes(mesh).get("model", 1)

@@ -1,0 +1,219 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Terms (per DESIGN.md §6; hardware constants for a TPU-v5e-class chip):
+  T_compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+  T_memory     = HLO_bytes_per_device / HBM_BW
+  T_collective = wire_bytes_per_device / ICI_BW
+
+``cost_analysis()`` has no collective traffic, so wire bytes are parsed
+from the post-SPMD optimized HLO (``compiled.as_text()``): every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+definition contributes per the standard ring-algorithm cost model:
+  all-gather        out * (g-1)/g
+  reduce-scatter    out * (g-1)          (operand = out * g)
+  all-reduce        2 * size * (g-1)/g
+  all-to-all        size * (g-1)/g
+  collective-permute  size
+where g is the replica-group size parsed from the op's replica_groups.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # B/s per chip
+ICI_BW = 50e9            # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+@dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0
+    raw_bytes: float = 0.0
+    by_op: Dict[str, float] = field(default_factory=dict)
+    counts: Dict[str, int] = field(default_factory=dict)
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        lhs, _, rhs = ls.partition(" = ")
+        # op name appears right after the result type in the rhs
+        opname = None
+        for op in _COLLECTIVES:
+            if re.search(rf"\b{op}(-start)?\(", rhs):
+                opname = op
+                break
+        if opname is None:
+            continue
+        if f"{opname}-done" in rhs:
+            continue
+        # result shapes: everything between '=' and the op call
+        head = rhs.split(f" {opname}", 1)[0] if f" {opname}" in rhs else \
+            rhs.split("(", 1)[0]
+        shapes = _SHAPE_RE.findall(head)
+        size = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        if size == 0:
+            continue
+        g = _group_size(ls, n_devices)
+        if opname == "all-gather":
+            # -start result tuples include the operand alias; keep the
+            # largest component as the gathered output.
+            out = max(_shape_bytes(dt, dims) for dt, dims in shapes)
+            wire = out * (g - 1) / max(g, 1)
+        elif opname == "reduce-scatter":
+            out = max(_shape_bytes(dt, dims) for dt, dims in shapes)
+            wire = out * (g - 1)
+        elif opname == "all-reduce":
+            out = max(_shape_bytes(dt, dims) for dt, dims in shapes)
+            wire = 2.0 * out * (g - 1) / max(g, 1)
+        elif opname == "all-to-all":
+            out = max(_shape_bytes(dt, dims) for dt, dims in shapes)
+            wire = out * (g - 1) / max(g, 1)
+        else:  # collective-permute
+            out = max(_shape_bytes(dt, dims) for dt, dims in shapes)
+            wire = float(out)
+        stats.wire_bytes += wire
+        stats.raw_bytes += size
+        stats.by_op[opname] = stats.by_op.get(opname, 0.0) + wire
+        stats.counts[opname] = stats.counts.get(opname, 0) + 1
+    return stats
+
+
+def terms(flops_per_dev: float, bytes_per_dev: float,
+          wire_bytes_per_dev: float) -> Dict[str, float]:
+    t = {
+        "t_compute_s": flops_per_dev / PEAK_FLOPS,
+        "t_memory_s": bytes_per_dev / HBM_BW,
+        "t_collective_s": wire_bytes_per_dev / ICI_BW,
+    }
+    dom = max(("compute", "memory", "collective"),
+              key=lambda k: t[f"t_{k}_s"])
+    t["dominant"] = dom
+    t["bound_s"] = max(t["t_compute_s"], t["t_memory_s"],
+                       t["t_collective_s"])
+    return t
+
+
+def analytic_memory_bytes(cfg, shape_cfg, *, n_devices: int,
+                          dp: int, tp: int, accum: int = 1) -> float:
+    """First-principles per-device HBM traffic for one step.
+
+    ``cost_analysis()['bytes accessed']`` is the *unfused* operand sum —
+    on the scanned program it counts loop bodies once (far too low), on
+    the unrolled program it counts every elementwise intermediate as HBM
+    traffic (orders too high; a TPU fuses those into VMEM/registers). So
+    the memory term uses the standard analytic model of what actually
+    crosses HBM, with both HLO numbers kept in the cell JSON for
+    reference:
+
+      train:   params: grad write + AdamW m/v read+write + param
+               read+write (f32)  → 24 B/param (+2 B bf16 cast read)
+               activations: with full remat only layer-boundary
+               checkpoints cross HBM: write (fwd) + read (bwd) + the
+               recompute pass re-writes intermediates inside fused
+               regions (not HBM) → 3 × tokens·d_model·2B per layer
+               logits: tokens × padded_vocab × 2B × (write + read)
+      prefill: params read (2 B) + checkpoints write + logits last-step
+      decode:  params read + KV-cache read (whole cache) + write (one
+               slot) + small activations
+
+    Everything is divided across the mesh the way the rule table shards
+    it: params over dp (FSDP) × tp (TP), tokens over dp, cache over tp.
+    MoE: only active-expert weights are *compute*-read, but decode reads
+    the routed experts' full rows per token — we charge active-only
+    (optimistic for tiny batch decode, exact for train/prefill).
+    """
+    P = cfg.param_count(active_only=True)
+    P_total = cfg.param_count(active_only=False)
+    L = max(cfg.num_layers, 1)
+    tokens = shape_cfg.global_batch * (1 if shape_cfg.kind == "decode"
+                                       else shape_cfg.seq_len)
+    tokens_dev = tokens / max(dp, 1)
+    d = max(cfg.d_model, 1)
+    vocab = max(cfg.padded_vocab, 1)
+
+    if shape_cfg.kind == "train":
+        # optimizer/param traffic is FSDP+TP sharded over all devices
+        p_dev = P_total / n_devices
+        param_bytes = p_dev * (4 + 4      # param read + write (f32)
+                               + 8 + 8    # m, v read + write
+                               + 4        # grad (f32) write+read amortized
+                               + 2)       # bf16 compute-cast read
+        ckpt = 3.0 * tokens_dev * d * 2 * L
+        logits = 2.0 * tokens_dev * (vocab / tp) * 2 * 2
+        # weights stream from HBM once per microbatch fwd + twice bwd
+        weight_stream = 3.0 * accum * (P / n_devices) * 2
+        return param_bytes + ckpt + logits + weight_stream
+    if shape_cfg.kind == "prefill":
+        p_dev = P / n_devices
+        ckpt = 1.0 * tokens_dev * d * 2 * L
+        logits = 2.0 * (shape_cfg.global_batch / dp) * (vocab / tp) * 2
+        return p_dev * 2 + ckpt + logits
+    # decode: one token per sequence; params + cache dominate
+    p_dev = P / max(tp, 1)          # weights TP-sharded, read every step
+    kh = max(cfg.num_kv_heads * cfg.kv_repeat, 1)
+    # bf16 cache: 2 B/elem; int8 cache: 1 B + f32 scale per dh row
+    kv_b = 2.0 if cfg.kv_cache_dtype != "int8" else \
+        1.0 + 4.0 / max(cfg.head_dim, 1)
+    cache = (shape_cfg.global_batch / max(dp, 1)) * \
+        (shape_cfg.seq_len / max(tp, 1)) * kh * max(cfg.head_dim, 1) \
+        * kv_b * 2 * L
+    if cfg.family in ("ssm", "hybrid"):
+        # recurrent state instead of (most of) the KV cache
+        state = (shape_cfg.global_batch / max(dp, 1)) * cfg.d_inner * \
+            max(cfg.ssm_state, 1) * 4 * 2 * L
+        cache = state if cfg.family == "ssm" else state + cache / max(
+            cfg.shared_attn_every, 1)
+    logits = (shape_cfg.global_batch / dp) * (vocab / tp) * 2 * 2
+    return p_dev * 2 + cache + logits
+
+
+def model_flops(cfg, shape_cfg) -> float:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (fwd-only steps)."""
+    from repro.models.model import count_nonembedding_params
+    n = count_nonembedding_params(cfg, active_only=True)
+    if shape_cfg.kind == "train":
+        d = shape_cfg.global_batch * shape_cfg.seq_len
+        return 6.0 * n * d
+    if shape_cfg.kind == "prefill":
+        d = shape_cfg.global_batch * shape_cfg.seq_len
+        return 2.0 * n * d
+    d = shape_cfg.global_batch * 1  # decode: one token per sequence
+    return 2.0 * n * d

@@ -1,0 +1,82 @@
+"""ShapeDtypeStruct input stand-ins + NamedShardings for the dry-run.
+
+Nothing here allocates device memory: parameter/optimizer/cache shapes
+come from ``jax.eval_shape`` over the real initializers, inputs are
+constructed directly. (Deliverable e: the weak-type-correct, shardable,
+no-allocation pattern.)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import model as model_lib
+from repro.optim.adamw import AdamWState
+from repro.sharding import spec_for, tree_shardings
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_shapes(cfg):
+    return jax.eval_shape(lambda k: model_lib.init_params(cfg, k),
+                          _sds((2,), jnp.uint32))
+
+
+def param_shardings(cfg, mesh):
+    return tree_shardings(model_lib.param_specs(cfg), mesh)
+
+
+def opt_shapes(cfg, optimizer, pshapes):
+    return jax.eval_shape(optimizer.init, pshapes)
+
+
+def opt_shardings(pshardings, mesh) -> AdamWState:
+    """AdamWState(step, m, v): m/v mirror params; step replicated."""
+    rep = NamedSharding(mesh, P())
+    return AdamWState(step=rep, m=pshardings, v=pshardings)
+
+
+def batch_specs(cfg, shape_cfg, mesh, *, with_labels: bool
+                ) -> Tuple[Dict, Dict]:
+    B, S = shape_cfg.global_batch, shape_cfg.seq_len
+    bspec = spec_for(["batch"])
+    shapes: Dict[str, Any] = {}
+    shards: Dict[str, Any] = {}
+    if cfg.frontend != "none":
+        shapes["embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+        shards["embeds"] = NamedSharding(mesh, P(*bspec, None, None))
+    else:
+        shapes["tokens"] = _sds((B, S), jnp.int32)
+        shards["tokens"] = NamedSharding(mesh, P(*bspec, None))
+    if with_labels:
+        shapes["labels"] = _sds((B, S), jnp.int32)
+        shards["labels"] = NamedSharding(mesh, P(*bspec, None))
+    return shapes, shards
+
+
+def cache_shapes(cfg, batch: int, cache_len: int):
+    return jax.eval_shape(
+        lambda: model_lib.init_cache(cfg, batch, cache_len))
+
+
+def cache_shardings(cfg, mesh):
+    return tree_shardings(model_lib.cache_specs(cfg), mesh)
+
+
+def decode_specs(cfg, shape_cfg, mesh):
+    """(shapes, shardings) for (cache, tokens, pos)."""
+    B = shape_cfg.global_batch
+    cache_len = shape_cfg.seq_len
+    cshape = cache_shapes(cfg, B, cache_len)
+    cshard = cache_shardings(cfg, mesh)
+    bspec = spec_for(["batch"])
+    tshape = _sds((B, 1), jnp.int32)
+    tshard = NamedSharding(mesh, P(*bspec, None))
+    pshape = _sds((), jnp.int32)
+    pshard = NamedSharding(mesh, P())
+    return (cshape, tshape, pshape), (cshard, tshard, pshard)

@@ -1,0 +1,281 @@
+"""GQA attention: chunked (flash-style) prefill/train, ring-buffer
+windowed KV caches, gemma-style logit softcaps, RoPE, QKV bias.
+
+Layout notes
+------------
+q is kept grouped as (B, S, KH_eff, G, dh) where KH_eff = num_kv_heads *
+cfg.kv_repeat (KV heads are replicated so KH_eff divides the TP degree —
+the standard GQA-under-TP trick). Scores are computed grouped so the KV
+cache is never materialized at full head count.
+
+Sharding (logical names; resolved by the launcher's rules):
+  train/prefill: "act_kv" -> model (head parallel), "act_kvseq" -> None
+  decode:        "act_kv" -> None,  "act_kvseq" -> model (seq-parallel KV)
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, softcap
+from repro.sharding import shard
+
+NEG_INF = -2.0e38
+
+
+# --------------------------------------------------------------------- #
+# params
+# --------------------------------------------------------------------- #
+def attn_init(key, cfg) -> Dict:
+    d, H, KH, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {
+        "wq": dense_init(ks[0], (d, H, dh), dt, fan_in=d),
+        "wk": dense_init(ks[1], (d, KH, dh), dt, fan_in=d),
+        "wv": dense_init(ks[2], (d, KH, dh), dt, fan_in=d),
+        "wo": dense_init(ks[3], (H, dh, d), dt, fan_in=H * dh),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, dh), dt)
+        p["bk"] = jnp.zeros((KH, dh), dt)
+        p["bv"] = jnp.zeros((KH, dh), dt)
+    return p
+
+
+def attn_specs(cfg) -> Dict:
+    s = {
+        "wq": ("embed", "heads", None),
+        "wk": ("embed", "kv_heads", None),
+        "wv": ("embed", "kv_heads", None),
+        "wo": ("heads", None, "embed"),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ("heads", None)
+        s["bk"] = ("kv_heads", None)
+        s["bv"] = ("kv_heads", None)
+    return s
+
+
+# --------------------------------------------------------------------- #
+# core attend
+# --------------------------------------------------------------------- #
+def _masked_softmax(scores: jax.Array, mask: jax.Array) -> jax.Array:
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    m = jnp.maximum(m, -1e30)  # rows that are fully masked stay finite
+    e = jnp.exp(scores - m)
+    e = jnp.where(mask, e, 0.0)
+    return e / jnp.maximum(e.sum(axis=-1, keepdims=True), 1e-30)
+
+
+def _attend_block(q, k, v, q_pos, k_pos, *, window, cap, scale):
+    """q: (B, Sq, KH, G, dh); k/v: (B, T, KH, dh); *_pos int32 (B, Sq)/(B, T)."""
+    dt = q.dtype
+    scores = jnp.einsum("bqkgd,btkd->bkgqt", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = softcap(scores, cap)
+    scores = shard(scores, "batch", "act_kv", None, None, "act_kvseq")
+    mask = (k_pos[:, None, :] <= q_pos[:, :, None]) & (k_pos[:, None, :] >= 0)
+    if window is not None:
+        win_ok = k_pos[:, None, :] > (q_pos[:, :, None] - window)
+        mask = mask & jnp.where(window > 0, win_ok, True)
+    w = _masked_softmax(scores, mask[:, None, None, :, :])
+    out = jnp.einsum("bkgqt,btkd->bqkgd", w.astype(dt), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(dt)
+
+
+def attend(q, k, v, q_pos, k_pos, *, window=None, cap=0.0, scale=1.0,
+           q_chunk: int = 1024, unroll: bool = False):
+    """Chunked attention over the query axis (memory ~ Sq_chunk * T)."""
+    B, Sq = q.shape[0], q.shape[1]
+    if Sq <= q_chunk or Sq % q_chunk != 0:
+        return _attend_block(q, k, v, q_pos, k_pos,
+                             window=window, cap=cap, scale=scale)
+    nc = Sq // q_chunk
+    qs = q.reshape(B, nc, q_chunk, *q.shape[2:]).swapaxes(0, 1)
+    ps = q_pos.reshape(B, nc, q_chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(_, qc_pc):
+        qc, pc = qc_pc
+        return (), _attend_block(qc, k, v, pc, k_pos,
+                                 window=window, cap=cap, scale=scale)
+
+    _, out = jax.lax.scan(body, (), (qs, ps), unroll=unroll)
+    return out.swapaxes(0, 1).reshape(B, Sq, *q.shape[2:])
+
+
+# --------------------------------------------------------------------- #
+# cache helpers (ring buffer when T < full sequence)
+# --------------------------------------------------------------------- #
+def _quant_kv(x):
+    """Per-(position, head) symmetric int8 quantization of K/V rows --
+    the paper's 8-bit ex-situ storage discipline applied to the decode
+    cache (Perf cell C). Returns (codes int8, scale f32 without dh)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale[..., 0]
+
+
+def _dequant_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def init_attn_cache(cfg, batch: int, cache_len: int, dtype) -> Dict:
+    KH_eff = cfg.num_kv_heads * cfg.kv_repeat
+    shp = (batch, cache_len, KH_eff, cfg.head_dim)
+    if cfg.kv_cache_dtype == "int8":
+        sshp = shp[:-1]
+        return {"k": jnp.zeros(shp, jnp.int8),
+                "v": jnp.zeros(shp, jnp.int8),
+                "ks": jnp.zeros(sshp, jnp.float32),
+                "vs": jnp.zeros(sshp, jnp.float32)}
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+
+
+def attn_cache_specs(cfg) -> Dict:
+    s = {"k": ("batch", "act_kvseq", "act_kv", None),
+         "v": ("batch", "act_kvseq", "act_kv", None)}
+    if cfg.kv_cache_dtype == "int8":
+        s["ks"] = ("batch", "act_kvseq", "act_kv")
+        s["vs"] = ("batch", "act_kvseq", "act_kv")
+    return s
+
+
+def _ring_positions(pos: jax.Array, T: int) -> jax.Array:
+    """Absolute position stored in each ring slot after writing `pos`."""
+    j = jnp.arange(T, dtype=jnp.int32)
+    return pos - ((pos % T - j) % T)
+
+
+def _store_prefill(cache_len: int, k: jax.Array) -> jax.Array:
+    """Store a prefilled sequence (B, S, KH, dh) into a ring of length T."""
+    S = k.shape[1]
+    if S <= cache_len:
+        pad = cache_len - S
+        return jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    last = k[:, S - cache_len:, :, :]
+    shift = (S - cache_len) % cache_len
+    return jnp.roll(last, shift, axis=1)
+
+
+def _store_prefill_scale(cache_len: int, s: jax.Array) -> jax.Array:
+    """The (B, S, KH) scale companion of ``_store_prefill``."""
+    S = s.shape[1]
+    if S <= cache_len:
+        return jnp.pad(s, ((0, 0), (0, cache_len - S), (0, 0)))
+    last = s[:, S - cache_len:, :]
+    shift = (S - cache_len) % cache_len
+    return jnp.roll(last, shift, axis=1)
+
+
+# --------------------------------------------------------------------- #
+# full layer apply
+# --------------------------------------------------------------------- #
+def attn_apply(p: Dict, cfg, x: jax.Array, *, positions: jax.Array,
+               mode: str, cache: Optional[Dict] = None,
+               window=None) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B, S, d). positions: (B, S) absolute token positions.
+
+    mode: "train" (no cache), "prefill" (build cache), "decode" (S == 1,
+    read+update cache; ``per_slot`` lets every batch lane hold its own
+    position — the continuous-batching serving path).
+    Returns (out (B, S, d), new_cache)."""
+    dt = x.dtype
+    B, S, _ = x.shape
+    H, KH, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    KH_eff = KH * cfg.kv_repeat
+    G = H // KH_eff
+    scale = cfg.attn_scale if cfg.attn_scale else dh ** -0.5
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.kv_repeat > 1:
+        k = jnp.repeat(k, cfg.kv_repeat, axis=2)
+        v = jnp.repeat(v, cfg.kv_repeat, axis=2)
+
+    q = q.reshape(B, S, KH_eff, G, dh)
+    q = shard(q, "batch", None, "act_kv", None, None)
+    k = shard(k, "batch", "act_kvseq", "act_kv", None)
+    v = shard(v, "batch", "act_kvseq", "act_kv", None)
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and S == 1
+        T = cache["k"].shape[1]
+        quant = cfg.kv_cache_dtype == "int8"
+        if quant:
+            kq, ks_new = _quant_kv(k)
+            vq, vs_new = _quant_kv(v)
+        else:
+            kq, vq, ks_new, vs_new = k, v, None, None
+        if cfg.decode_per_slot:
+            # continuous batching: every slot decodes at its own position
+            pos_b = positions[:, 0]                      # (B,)
+            idx = pos_b % T
+            bidx = jnp.arange(B)
+            ck = cache["k"].at[bidx, idx].set(kq[:, 0])
+            cv = cache["v"].at[bidx, idx].set(vq[:, 0])
+            if quant:
+                cks = cache["ks"].at[bidx, idx].set(ks_new[:, 0])
+                cvs = cache["vs"].at[bidx, idx].set(vs_new[:, 0])
+            k_pos = jax.vmap(_ring_positions, (0, None))(pos_b, T)
+        else:
+            pos = positions[0, 0]  # lockstep decode: scalar position
+            idx = pos % T
+            ck = jax.lax.dynamic_update_slice(cache["k"], kq, (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], vq, (0, idx, 0, 0))
+            if quant:
+                cks = jax.lax.dynamic_update_slice(cache["ks"], ks_new,
+                                                   (0, idx, 0))
+                cvs = jax.lax.dynamic_update_slice(cache["vs"], vs_new,
+                                                   (0, idx, 0))
+            k_pos = jnp.broadcast_to(_ring_positions(pos, T)[None, :],
+                                     (B, T))
+        ck = shard(ck, "batch", "act_kvseq", "act_kv", None)
+        cv = shard(cv, "batch", "act_kvseq", "act_kv", None)
+        if quant:
+            new_cache = {"k": ck, "v": cv, "ks": cks, "vs": cvs}
+            k_att = _dequant_kv(ck, cks, dt)
+            v_att = _dequant_kv(cv, cvs, dt)
+        else:
+            new_cache = {"k": ck, "v": cv}
+            k_att, v_att = ck, cv
+        out = _attend_block(q, k_att, v_att, positions, k_pos,
+                            window=window, cap=cfg.attn_softcap, scale=scale)
+    else:
+        k_pos = positions
+        out = attend(q, k, v, positions, k_pos,
+                     window=window, cap=cfg.attn_softcap, scale=scale,
+                     unroll=not cfg.scan_layers)
+        if mode == "prefill":
+            T = min(S, cfg.sliding_window) if window is not None and \
+                isinstance(window, int) and window > 0 else S
+            if cfg.kv_cache_dtype == "int8":
+                kq, ks_new = _quant_kv(k)
+                vq, vs_new = _quant_kv(v)
+                new_cache = {"k": _store_prefill(T, kq),
+                             "v": _store_prefill(T, vq),
+                             "ks": _store_prefill_scale(T, ks_new),
+                             "vs": _store_prefill_scale(T, vs_new)}
+            else:
+                new_cache = {"k": _store_prefill(T, k),
+                             "v": _store_prefill(T, v)}
+
+    out = out.reshape(B, S, H, dh)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    return out, new_cache

@@ -1,0 +1,233 @@
+"""Mamba2 block — chunked SSD (state-space dual) formulation.
+
+Training/prefill use the chunked algorithm: intra-chunk terms are dense
+matmuls (MXU-friendly), inter-chunk state is a short sequential scan over
+chunks. All exponentials are of non-positive arguments (cumulative log
+decay), so the computation is stable without extra max-shifts.
+
+Decode is the single-step recurrence  h <- a h + dt·x ⊗ B,  y = C·h + D x
+with a ring conv state for the width-4 causal conv stem.
+
+The canonical fused in_proj/conv are split into per-stream (z, x, B, C,
+dt) projections and per-stream depthwise convs — mathematically
+identical, but every tensor-parallel dimension is then split-aligned
+(no resharding at slice boundaries under GSPMD).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import causal_conv1d, conv_update, dense_init, rms_norm
+from repro.sharding import shard
+
+
+def _dims(cfg):
+    d_in = cfg.d_inner
+    H = cfg.ssm_heads
+    P = cfg.ssm_headdim
+    N = cfg.ssm_state
+    G = cfg.ssm_ngroups
+    return d_in, H, P, N, G
+
+
+def mamba_init(key, cfg) -> Dict:
+    d = cfg.d_model
+    d_in, H, P, N, G = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.param_dtype)
+    W = cfg.conv_width
+    # dt bias init so softplus(dt_bias) spans ~[1e-3, 1e-1] (mamba2 default)
+    u = jax.random.uniform(ks[4], (H,), jnp.float32)
+    dt0 = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))  # inverse softplus
+    kc = jax.random.split(ks[5], 3)
+    return {
+        "z_proj": dense_init(ks[0], (d, d_in), dt),
+        "x_proj": dense_init(ks[1], (d, d_in), dt),
+        "b_proj": dense_init(ks[2], (d, G * N), dt),
+        "c_proj": dense_init(ks[3], (d, G * N), dt),
+        "dt_proj": dense_init(jax.random.fold_in(key, 7), (d, H), dt),
+        "conv_x_w": dense_init(kc[0], (W, d_in), dt, fan_in=W),
+        "conv_x_b": jnp.zeros((d_in,), dt),
+        "conv_b_w": dense_init(kc[1], (W, G * N), dt, fan_in=W),
+        "conv_b_b": jnp.zeros((G * N,), dt),
+        "conv_c_w": dense_init(kc[2], (W, G * N), dt, fan_in=W),
+        "conv_c_b": jnp.zeros((G * N,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dt),
+        "D": jnp.ones((H,), dt),
+        "dt_bias": dt_bias.astype(dt),
+        "norm": jnp.ones((d_in,), dt),
+        "out_proj": dense_init(jax.random.fold_in(key, 8), (d_in, d), dt,
+                               fan_in=d_in),
+    }
+
+
+def mamba_specs(cfg) -> Dict:
+    return {
+        "z_proj": ("embed", "ff"), "x_proj": ("embed", "ff"),
+        "b_proj": ("embed", None), "c_proj": ("embed", None),
+        "dt_proj": ("embed", "ssm_heads"),
+        "conv_x_w": (None, "ff"), "conv_x_b": ("ff",),
+        "conv_b_w": (None, None), "conv_b_b": (None,),
+        "conv_c_w": (None, None), "conv_c_b": (None,),
+        "A_log": ("ssm_heads",), "D": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "norm": ("ff",),
+        "out_proj": ("ff", "embed"),
+    }
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
+    """SSD scan. xh: (B, L, H, P); dt: (B, L, H) (post-softplus);
+    A: (H,) positive decay rates; Bm/Cm: (B, L, G, N). Returns y (B,L,H,P)
+    and final state (B, H, P, N)."""
+    Bsz, L, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    nc = max(L // chunk, 1)
+    Q = L // nc
+    f32 = jnp.float32
+
+    la = (-A.astype(f32) * dt.astype(f32))            # (B, L, H) log decay <=0
+    xdt = xh.astype(f32) * dt.astype(f32)[..., None]  # (B, L, H, P)
+
+    def rs(t, *tail):
+        return t.reshape(Bsz, nc, Q, *tail)
+
+    la_c = rs(la, H)
+    cum = jnp.cumsum(la_c, axis=2)                    # (B, nc, Q, H)
+    x_c = rs(xdt, H, P)
+    B_c = rs(Bm.astype(f32), G, N)
+    C_c = rs(Cm.astype(f32), G, N)
+    hpg = H // G
+
+    # intra-chunk: Y[i] = sum_{j<=i} (C_i . B_j) exp(cum_i - cum_j) xdt_j
+    gb = jnp.einsum("bcqgn,bckgn->bcgqk", C_c, B_c)   # (B, nc, G, Q, Q)
+    gb = jnp.repeat(gb, hpg, axis=2)                  # (B, nc, H, Q, Q)
+    # build (B, nc, H, Q, K) decay matrix exp(cum_i - cum_j), i>=j
+    ci = cum.transpose(0, 1, 3, 2)                    # (B, nc, H, Q)
+    dmat = ci[..., :, None] - ci[..., None, :]        # (B, nc, H, Q, K)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    dmat = jnp.where(mask, dmat, -jnp.inf)
+    M = gb * jnp.exp(dmat)
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", M, x_c)
+
+    # chunk summaries: S_c = sum_j B_j ⊗ xdt_j * exp(cum_last - cum_j)
+    wlast = jnp.exp(cum[:, :, -1:, :] - cum)          # (B, nc, Q, H)
+    Bh = jnp.repeat(B_c, hpg, axis=3)                 # (B, nc, Q, H, N)
+    S_loc = jnp.einsum("bcqhn,bcqhp,bcqh->bchpn", Bh, x_c, wlast)
+
+    # inter-chunk recurrence over nc (sequential, nc is small)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])           # (B, nc, H)
+
+    def body(s_prev, inp):
+        dec, s_loc = inp                              # (B,H), (B,H,P,N)
+        s = s_prev * dec[..., None, None] + s_loc
+        return s, s_prev
+
+    s0 = jnp.zeros((Bsz, H, P, N), f32)
+    s_final, s_prevs = jax.lax.scan(
+        body, s0, (chunk_decay.swapaxes(0, 1), S_loc.swapaxes(0, 1)))
+    s_prevs = s_prevs.swapaxes(0, 1)                  # (B, nc, H, P, N)
+
+    # inter-chunk contribution: Y[i] += C_i . S_prev * exp(cum_i)
+    Ch = jnp.repeat(C_c, hpg, axis=3)                 # (B, nc, Q, H, N)
+    y_inter = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Ch, s_prevs,
+                         jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(Bsz, L, H, P)
+    return y, s_final
+
+
+def mamba_apply(p: Dict, cfg, x: jax.Array, *, mode: str,
+                cache: Optional[Dict] = None, chunk: int = 256
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B, L, d) for train/prefill, (B, 1, d) for decode."""
+    dt_ = x.dtype
+    d_in, H, P, N, G = _dims(cfg)
+    Bsz, L, _ = x.shape
+    W = cfg.conv_width
+
+    z = jnp.einsum("bld,dk->blk", x, p["z_proj"].astype(dt_))
+    xr = jnp.einsum("bld,dk->blk", x, p["x_proj"].astype(dt_))
+    br = jnp.einsum("bld,dk->blk", x, p["b_proj"].astype(dt_))
+    cr = jnp.einsum("bld,dk->blk", x, p["c_proj"].astype(dt_))
+    dtr = jnp.einsum("bld,dk->blk", x, p["dt_proj"].astype(dt_))
+
+    if mode == "decode":
+        assert cache is not None and L == 1
+        h = cache["ssm"]
+        cx, xt = conv_update(cache["conv_x"], xr[:, 0], p["conv_x_w"].astype(dt_),
+                             p["conv_x_b"].astype(dt_))
+        cb, bt = conv_update(cache["conv_b"], br[:, 0], p["conv_b_w"].astype(dt_),
+                             p["conv_b_b"].astype(dt_))
+        cc, ct = conv_update(cache["conv_c"], cr[:, 0], p["conv_c_w"].astype(dt_),
+                             p["conv_c_b"].astype(dt_))
+        xt, bt, ct = (jax.nn.silu(t) for t in (xt, bt, ct))
+        xs = xt.reshape(Bsz, H, P).astype(jnp.float32)
+        Bm = bt.reshape(Bsz, G, N).astype(jnp.float32)
+        Cm = ct.reshape(Bsz, G, N).astype(jnp.float32)
+        dts = jax.nn.softplus(dtr[:, 0].astype(jnp.float32)
+                              + p["dt_bias"].astype(jnp.float32))  # (B, H)
+        A = jnp.exp(p["A_log"].astype(jnp.float32))
+        a = jnp.exp(-A * dts)                          # (B, H)
+        hpg = H // G
+        Bh = jnp.repeat(Bm, hpg, axis=1)               # (B, H, N)
+        Ch = jnp.repeat(Cm, hpg, axis=1)
+        h = h * a[..., None, None] + \
+            jnp.einsum("bhn,bhp,bh->bhpn", Bh, xs, dts)
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ch)
+        y = y + xs * p["D"].astype(jnp.float32)[None, :, None]
+        y = y.reshape(Bsz, 1, d_in).astype(dt_)
+        new_cache = {"conv_x": cx, "conv_b": cb, "conv_c": cc, "ssm": h}
+    else:
+        xc = jax.nn.silu(causal_conv1d(xr, p["conv_x_w"].astype(dt_),
+                                       p["conv_x_b"].astype(dt_)))
+        bc = jax.nn.silu(causal_conv1d(br, p["conv_b_w"].astype(dt_),
+                                       p["conv_b_b"].astype(dt_)))
+        cc_ = jax.nn.silu(causal_conv1d(cr, p["conv_c_w"].astype(dt_),
+                                        p["conv_c_b"].astype(dt_)))
+        xs = xc.reshape(Bsz, L, H, P)
+        xs = shard(xs, "batch", None, "ff", None)
+        Bm = bc.reshape(Bsz, L, G, N)
+        Cm = cc_.reshape(Bsz, L, G, N)
+        dts = jax.nn.softplus(dtr.astype(jnp.float32)
+                              + p["dt_bias"].astype(jnp.float32))
+        A = jnp.exp(p["A_log"].astype(jnp.float32))
+        y, s_final = ssd_chunked(xs, dts, A, Bm, Cm, chunk)
+        y = y + xs.astype(jnp.float32) * \
+            p["D"].astype(jnp.float32)[None, None, :, None]
+        y = y.reshape(Bsz, L, d_in).astype(dt_)
+        new_cache = None
+        if mode == "prefill":
+            def laststate(pre):
+                padded = jnp.pad(pre, ((0, 0), (W - 1, 0), (0, 0)))
+                return padded[:, L:L + W - 1, :]
+            new_cache = {"conv_x": laststate(xr), "conv_b": laststate(br),
+                         "conv_c": laststate(cr), "ssm": s_final}
+
+    # gated RMSNorm (mamba2: norm(y * silu(z)))
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    y = shard(y, "batch", None, "ff")
+    out = jnp.einsum("blk,kd->bld", y, p["out_proj"].astype(dt_))
+    return out, new_cache
+
+
+def init_mamba_cache(cfg, batch: int, dtype) -> Dict:
+    d_in, H, P, N, G = _dims(cfg)
+    W = cfg.conv_width
+    return {
+        "conv_x": jnp.zeros((batch, W - 1, d_in), dtype),
+        "conv_b": jnp.zeros((batch, W - 1, G * N), dtype),
+        "conv_c": jnp.zeros((batch, W - 1, G * N), dtype),
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+    }
+
+
+def mamba_cache_specs(cfg) -> Dict:
+    return {"conv_x": ("batch", None, "ff"),
+            "conv_b": ("batch", None, None),
+            "conv_c": ("batch", None, None),
+            "ssm": ("batch", "ssm_heads", None, None)}

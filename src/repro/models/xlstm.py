@@ -1,0 +1,351 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel with log-space
+stabilization) and sLSTM (scalar memory, sequential scan with
+block-diagonal recurrence). Follows arXiv:2405.04517; the chunked mLSTM
+is the TPU-friendly parallel form (intra-chunk dense matmuls, short
+inter-chunk scan), validated against the naive sequential recurrence in
+tests.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (act_fn, causal_conv1d, conv_update,
+                                 dense_init, rms_norm)
+from repro.sharding import shard
+
+NEG = -1e30
+
+
+def _mdims(cfg):
+    dm = int(cfg.mlstm_proj_factor * cfg.d_model)
+    Hl = cfg.num_lstm_heads
+    dh = dm // Hl
+    return dm, Hl, dh
+
+
+# ===================================================================== #
+# mLSTM
+# ===================================================================== #
+def mlstm_init(key, cfg) -> Dict:
+    d = cfg.d_model
+    dm, Hl, dh = _mdims(cfg)
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "norm": jnp.ones((d,), dt),
+        "w_up_x": dense_init(ks[0], (d, dm), dt),
+        "w_up_z": dense_init(ks[1], (d, dm), dt),
+        "conv_w": dense_init(ks[2], (cfg.conv_width, dm), dt,
+                             fan_in=cfg.conv_width),
+        "conv_b": jnp.zeros((dm,), dt),
+        "wq": dense_init(ks[3], (dm, dm), dt),
+        "wk": dense_init(ks[4], (dm, dm), dt),
+        "wv": dense_init(ks[5], (dm, dm), dt),
+        "wi": dense_init(ks[6], (dm, Hl), dt),
+        "bi": jnp.full((Hl,), -3.0, dt),   # input gate starts fairly closed
+        "wf": dense_init(ks[7], (dm, Hl), dt),
+        "bf": jnp.full((Hl,), 3.0, dt),    # forget gate starts open
+        "skip": jnp.ones((dm,), dt),
+        "hnorm": jnp.ones((dm,), dt),
+        "w_down": dense_init(jax.random.fold_in(key, 99), (dm, d), dt,
+                             fan_in=dm),
+    }
+
+
+def mlstm_specs(cfg) -> Dict:
+    return {
+        "norm": (None,), "w_up_x": ("embed", "ff"), "w_up_z": ("embed", "ff"),
+        "conv_w": (None, "ff"), "conv_b": ("ff",),
+        "wq": ("embed", "ff"), "wk": ("embed", "ff"), "wv": ("embed", "ff"),
+        "wi": ("ff", None), "bi": (None,), "wf": ("ff", None), "bf": (None,),
+        "skip": ("ff",), "hnorm": ("ff",), "w_down": ("ff", "embed"),
+    }
+
+
+def _headnorm(h: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    """Per-head RMS norm over dh; h: (..., Hl, dh); scale: (Hl*dh,)."""
+    shp = h.shape
+    dt = h.dtype
+    hf = h.astype(jnp.float32)
+    var = jnp.mean(jnp.square(hf), axis=-1, keepdims=True)
+    hf = hf * jax.lax.rsqrt(var + eps)
+    hf = hf.reshape(*shp[:-2], shp[-2] * shp[-1]) * scale.astype(jnp.float32)
+    return hf.reshape(shp).astype(dt)
+
+
+def mlstm_cell_chunked(q, k, v, log_i, log_f, state, chunk: int):
+    """q/k/v: (B, L, H, dh) (k pre-scaled by 1/sqrt(dh)); log_i/log_f:
+    (B, L, H); state: (C (B,H,dh,dh), n (B,H,dh), m (B,H)) or None.
+    Returns (h (B,L,H,dh), state')."""
+    Bsz, L, H, dh = q.shape
+    f32 = jnp.float32
+    nc = max(L // chunk, 1)
+    Q = L // nc
+
+    def rs(t, *tail):
+        return t.reshape(Bsz, nc, Q, *tail)
+
+    qc, kc, vc = rs(q, H, dh), rs(k, H, dh), rs(v, H, dh)
+    li = rs(log_i.astype(f32), H)
+    lf = rs(log_f.astype(f32), H)
+    b = jnp.cumsum(lf, axis=2)                           # (B, nc, Q, H)
+    bl = b[:, :, -1, :]                                  # (B, nc, H)
+
+    # intra-chunk stabilized scores: s_ij = b_i - b_j + li_j  (i >= j)
+    bi_ = b.transpose(0, 1, 3, 2)                        # (B, nc, H, Q)
+    s = bi_[..., :, None] - bi_[..., None, :] \
+        + li.transpose(0, 1, 3, 2)[..., None, :]         # (B, nc, H, Q, K)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    s = jnp.where(mask, s, NEG)
+    m_intra = jnp.max(s, axis=-1)                        # (B, nc, H, Q)
+
+    qk = jnp.einsum("bcqhd,bckhd->bchqk", qc.astype(f32), kc.astype(f32))
+    qk = shard(qk, "batch", "cchunk", None, None, None)
+
+    # chunk-local summaries for the state recurrence
+    g = (bl[:, :, None, :] - b + li)                     # (B, nc, Q, H)
+    m_loc = jnp.max(g, axis=2)                           # (B, nc, H)
+
+    if state is None:
+        C0 = jnp.zeros((Bsz, H, dh, dh), f32)
+        n0 = jnp.zeros((Bsz, H, dh), f32)
+        m0 = jnp.full((Bsz, H), NEG, f32)
+    else:
+        C0, n0, m0 = (state[0].astype(f32), state[1].astype(f32),
+                      state[2].astype(f32))
+
+    def body(carry, xs):
+        C, n, m = carry
+        bl_c, g_c, m_loc_c, k_c, v_c = xs
+        m_new = jnp.maximum(bl_c + m, m_loc_c)           # (B, H)
+        sc_old = jnp.exp(bl_c + m - m_new)               # (B, H)
+        w = jnp.exp(g_c - m_new[:, None, :])             # (B, Q, H)
+        C_new = C * sc_old[..., None, None] + \
+            jnp.einsum("bqhd,bqhe,bqh->bhde", k_c.astype(f32),
+                       v_c.astype(f32), w)
+        n_new = n * sc_old[..., None] + \
+            jnp.einsum("bqhd,bqh->bhd", k_c.astype(f32), w)
+        return (C_new, n_new, m_new), (C, n, m)
+
+    xs = (bl.swapaxes(0, 1), g.swapaxes(0, 1), m_loc.swapaxes(0, 1),
+          kc.swapaxes(0, 1), vc.swapaxes(0, 1))
+    (Cf, nf, mf), (Cp, np_, mp) = jax.lax.scan(body, (C0, n0, m0), xs)
+    Cp = Cp.swapaxes(0, 1)                               # (B, nc, H, dh, dh)
+    np_ = np_.swapaxes(0, 1)                             # (B, nc, H, dh)
+    mp = mp.swapaxes(0, 1)                               # (B, nc, H)
+
+    # stabilizer per position: m_i = max(intra max, b_i + m_prev)
+    d_inter = b + mp[:, :, None, :]                      # (B, nc, Q, H)
+    m_i = jnp.maximum(m_intra.transpose(0, 1, 3, 2), d_inter)  # (B,nc,Q,H)
+    w_intra = jnp.exp(s - m_i.transpose(0, 1, 3, 2)[..., None])  # (B,nc,H,Q,K)
+    w_intra = jnp.where(mask, w_intra, 0.0)
+    w_inter = jnp.exp(d_inter - m_i)                     # (B, nc, Q, H)
+
+    num = jnp.einsum("bchqk,bckhe->bcqhe", w_intra * qk, vc.astype(f32))
+    num = num + jnp.einsum("bcqhd,bchde,bcqh->bcqhe", qc.astype(f32), Cp,
+                           w_inter)
+    den = jnp.einsum("bchqk->bchq", w_intra * qk).transpose(0, 1, 3, 2)
+    den = den + jnp.einsum("bcqhd,bchd->bcqh", qc.astype(f32), np_) * w_inter
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_i))       # (B, nc, Q, H)
+    h = num / den[..., None]
+    h = h.reshape(Bsz, L, H, dh)
+    return h, (Cf, nf, mf)
+
+
+def mlstm_cell_step(q, k, v, log_i, log_f, state):
+    """Single decode step. q/k/v: (B, H, dh); gates: (B, H)."""
+    f32 = jnp.float32
+    C, n, m = state
+    C, n, m = C.astype(f32), n.astype(f32), m.astype(f32)
+    q, k, v = q.astype(f32), k.astype(f32), v.astype(f32)
+    log_i, log_f = log_i.astype(f32), log_f.astype(f32)
+    m_new = jnp.maximum(log_f + m, log_i)
+    f_s = jnp.exp(log_f + m - m_new)
+    i_s = jnp.exp(log_i - m_new)
+    C = C * f_s[..., None, None] + i_s[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", k, v)
+    n = n * f_s[..., None] + i_s[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)),
+                      jnp.exp(-m_new))
+    return num / den[..., None], (C, n, m_new)
+
+
+def mlstm_apply(p: Dict, cfg, x: jax.Array, *, mode: str,
+                cache: Optional[Dict] = None, chunk: int = 256
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    dt = x.dtype
+    dm, Hl, dh = _mdims(cfg)
+    Bsz, L, _ = x.shape
+    h_in = rms_norm(x, p["norm"], cfg.norm_eps)
+    xm = jnp.einsum("bld,dk->blk", h_in, p["w_up_x"].astype(dt))
+    z = jnp.einsum("bld,dk->blk", h_in, p["w_up_z"].astype(dt))
+
+    new_cache = None
+    if mode == "decode":
+        conv_state, xc_t = conv_update(cache["conv"], xm[:, 0, :],
+                                       p["conv_w"].astype(dt),
+                                       p["conv_b"].astype(dt))
+        xc = jax.nn.silu(xc_t)[:, None, :]
+    else:
+        xc = jax.nn.silu(causal_conv1d(xm, p["conv_w"].astype(dt),
+                                       p["conv_b"].astype(dt)))
+
+    q = jnp.einsum("blk,km->blm", xc, p["wq"].astype(dt)).reshape(
+        Bsz, L, Hl, dh)
+    k = jnp.einsum("blk,km->blm", xc, p["wk"].astype(dt)).reshape(
+        Bsz, L, Hl, dh) / math.sqrt(dh)
+    v = jnp.einsum("blk,km->blm", xm, p["wv"].astype(dt)).reshape(
+        Bsz, L, Hl, dh)
+    log_i = jnp.einsum("blk,kh->blh", xc, p["wi"].astype(dt)) + \
+        p["bi"].astype(dt)
+    log_f = jax.nn.log_sigmoid(
+        jnp.einsum("blk,kh->blh", xc, p["wf"].astype(dt)) +
+        p["bf"].astype(dt))
+
+    if mode == "decode":
+        state = (cache["C"], cache["n"], cache["m"])
+        h, (C, n, m) = mlstm_cell_step(q[:, 0], k[:, 0], v[:, 0],
+                                       log_i[:, 0], log_f[:, 0], state)
+        h = h[:, None, :, :]
+        new_cache = {"conv": conv_state, "C": C.astype(cache["C"].dtype),
+                     "n": n, "m": m}
+    else:
+        h, (C, n, m) = mlstm_cell_chunked(q, k, v, log_i, log_f, None, chunk)
+        if mode == "prefill":
+            w = cfg.conv_width
+            padded = jnp.pad(xm, ((0, 0), (w - 1, 0), (0, 0)))
+            conv_state = padded[:, L:L + w - 1, :]
+            new_cache = {"conv": conv_state,
+                         "C": C.astype(jnp.bfloat16), "n": n, "m": m}
+
+    h = h.astype(dt)
+    h = _headnorm(h, p["hnorm"], cfg.norm_eps).reshape(Bsz, L, dm)
+    h = h + p["skip"].astype(dt) * xc
+    out = jnp.einsum("blk,kd->bld", h * jax.nn.silu(z),
+                     p["w_down"].astype(dt))
+    return out, new_cache
+
+
+def init_mlstm_cache(cfg, batch: int, dtype) -> Dict:
+    dm, Hl, dh = _mdims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, dm), dtype),
+        "C": jnp.zeros((batch, Hl, dh, dh), jnp.bfloat16),
+        "n": jnp.zeros((batch, Hl, dh), jnp.float32),
+        "m": jnp.full((batch, Hl), NEG, jnp.float32),
+    }
+
+
+def mlstm_cache_specs(cfg) -> Dict:
+    return {"conv": ("batch", None, "ff"),
+            "C": ("batch", None, None, "lstm_dh"),
+            "n": ("batch", None, None), "m": ("batch", None)}
+
+
+# ===================================================================== #
+# sLSTM
+# ===================================================================== #
+def slstm_init(key, cfg) -> Dict:
+    d = cfg.d_model
+    Hl = cfg.num_lstm_heads
+    dh = d // Hl
+    f = ((int(cfg.slstm_ff_factor * d) + 63) // 64) * 64  # TP-aligned
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "norm": jnp.ones((d,), dt),
+        "Wg": dense_init(ks[0], (d, 4 * d), dt),
+        "R": dense_init(ks[1], (4, Hl, dh, dh), dt, fan_in=dh),
+        "b": jnp.concatenate([
+            jnp.full((d,), -3.0), jnp.full((d,), 3.0),
+            jnp.zeros((d,)), jnp.zeros((d,))]).astype(dt),
+        "gnorm": jnp.ones((d,), dt),
+        "ffn_norm": jnp.ones((d,), dt),
+        "w1": dense_init(ks[2], (d, f), dt),
+        "w2": dense_init(ks[3], (f, d), dt, fan_in=f),
+    }
+
+
+def slstm_specs(cfg) -> Dict:
+    return {"norm": (None,), "Wg": ("embed", "ff"), "R": (None, None, None, None),
+            "b": ("ff",), "gnorm": (None,), "ffn_norm": (None,),
+            "w1": ("embed", "ff"), "w2": ("ff", "embed")}
+
+
+def _slstm_step(p, cfg, carry, gx_t):
+    """carry: (h, c, n, m) each (B, d) f32; gx_t: (B, 4d) f32 pre-recurrence."""
+    h, c, n, m = carry
+    d = h.shape[-1]
+    Hl = cfg.num_lstm_heads
+    dh = d // Hl
+    hh = h.reshape(-1, Hl, dh)
+    rec = jnp.einsum("bhd,ghde->gbhe", hh, p["R"].astype(jnp.float32))
+    rec = rec.reshape(4, -1, d)
+    gi, gf, gz, go = [gx_t[..., i * d:(i + 1) * d] + rec[i] for i in range(4)]
+    log_i = gi
+    log_f = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * jnp.tanh(gz)
+    n_new = f_s * n + i_s
+    h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1e-6)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_apply(p: Dict, cfg, x: jax.Array, *, mode: str,
+                cache: Optional[Dict] = None
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    dt = x.dtype
+    Bsz, L, d = x.shape
+    h_in = rms_norm(x, p["norm"], cfg.norm_eps)
+    gx = jnp.einsum("bld,dk->blk", h_in, p["Wg"].astype(dt)) + \
+        p["b"].astype(dt)
+    gx = gx.astype(jnp.float32)
+
+    if mode == "decode":
+        carry = (cache["h"], cache["c"], cache["n"], cache["m"])
+        carry = _slstm_step(p, cfg, carry, gx[:, 0, :])
+        hs = carry[0][:, None, :]
+        new_cache = {"h": carry[0], "c": carry[1], "n": carry[2],
+                     "m": carry[3]}
+    else:
+        z = jnp.zeros((Bsz, d), jnp.float32)
+        carry0 = (z, z, z, jnp.full((Bsz, d), NEG, jnp.float32))
+
+        def body(carry, gx_t):
+            nxt = _slstm_step(p, cfg, carry, gx_t)
+            return nxt, nxt[0]
+
+        carry, hs = jax.lax.scan(body, carry0, gx.swapaxes(0, 1))
+        hs = hs.swapaxes(0, 1)                            # (B, L, d)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"h": carry[0], "c": carry[1], "n": carry[2],
+                         "m": carry[3]}
+
+    hs = rms_norm(hs.astype(dt), p["gnorm"], cfg.norm_eps)
+    y = x + hs
+    # gelu FFN (proj factor 4/3)
+    hf = rms_norm(y, p["ffn_norm"], cfg.norm_eps)
+    hf = act_fn("gelu")(jnp.einsum("bld,df->blf", hf, p["w1"].astype(dt)))
+    hf = shard(hf, "batch", None, "ff")
+    y = y + jnp.einsum("blf,fd->bld", hf, p["w2"].astype(dt))
+    return y, new_cache
+
+
+def init_slstm_cache(cfg, batch: int) -> Dict:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((batch, d), NEG,
+                                                  jnp.float32)}
+
+
+def slstm_cache_specs(cfg) -> Dict:
+    return {"h": ("batch", None), "c": ("batch", None),
+            "n": ("batch", None), "m": ("batch", None)}

@@ -1,0 +1,79 @@
+"""Quantization-aware training — the paper's ex-situ training pipeline.
+
+The deployed chip holds 8-bit differential-pair weights and 8-bit (DAC)
+or 1-bit (threshold) activations; ex-situ training therefore trains
+*through* those constraints with straight-through estimators so the
+programmed network matches the trained one (§III.D, Fig. 12):
+
+  qat_params       — fake-quantize every matrix leaf of a param tree
+  qat_loss_fn      — wrap any loss so its forward sees quantized weights
+  precision_sweep  — the Fig. 12 experiment: accuracy vs (bits, act fn)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as q
+
+
+def qat_params(params, bits: int = 8) -> Any:
+    """Fake-quantize every >=2-D leaf (matrices/embeddings); biases and
+    norms stay float — they fold into the DAC/LUT scales on chip."""
+    def fq(p):
+        return q.fake_quant(p, bits=bits, per_column=True) \
+            if p.ndim >= 2 else p
+    return jax.tree.map(fq, params)
+
+
+def qat_loss_fn(loss_fn: Callable, bits: int = 8) -> Callable:
+    def wrapped(params, *args, **kw):
+        return loss_fn(qat_params(params, bits), *args, **kw)
+    return wrapped
+
+
+# --------------------------------------------------------------------- #
+# Fig. 12: bit width × activation function sweep
+# --------------------------------------------------------------------- #
+def train_mlp(x, y, dims, *, activation: str, weight_bits: int,
+              act_bits: int, steps: int = 300, lr: float = 0.05,
+              seed: int = 0) -> Dict[str, Any]:
+    """Small-MLP QAT trainer used by the Fig. 12 benchmark and the
+    examples. Float path when weight_bits >= 32."""
+    from repro.core.crossbar_layer import MLPSpec, mlp_apply, mlp_init
+
+    n_classes = dims[-1]
+    spec = MLPSpec(tuple(dims), activation=activation,
+                   out_activation="linear")
+    params = mlp_init(jax.random.PRNGKey(seed), spec)
+    mode = "float" if weight_bits >= 32 else "qat"
+
+    def loss(params, xb, yb):
+        logits = mlp_apply(params, xb, spec, weight_bits=weight_bits,
+                           act_bits=act_bits, mode=mode)
+        onehot = jax.nn.one_hot(yb, n_classes)
+        ls = jnp.mean(jnp.sum((jax.nn.log_softmax(logits) * -onehot),
+                              axis=-1))
+        return ls
+
+    @jax.jit
+    def step(params, xb, yb):
+        g = jax.grad(loss)(params, xb, yb)
+        return jax.tree.map(lambda p, g: p - lr * g, params, g)
+
+    n = x.shape[0]
+    bs = min(128, n)
+    for i in range(steps):
+        lo = (i * bs) % max(n - bs, 1)
+        params = step(params, x[lo:lo + bs], y[lo:lo + bs])
+    return {"params": params, "spec": spec}
+
+
+def accuracy(params, spec, x, y, *, mode: str, weight_bits: int = 8,
+             act_bits: int = 8) -> float:
+    from repro.core.crossbar_layer import mlp_apply
+    logits = mlp_apply(params, x, spec, weight_bits=weight_bits,
+                       act_bits=act_bits, mode=mode)
+    return float(jnp.mean(jnp.argmax(logits, -1) == y))

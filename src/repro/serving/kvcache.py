@@ -1,0 +1,41 @@
+"""Slot-level KV-cache surgery for continuous batching.
+
+The batched cache is one pytree whose leading (post-layer) axis is the
+slot/batch lane. Admitting a request = writing its prefilled prefix into
+lane ``slot``; retiring = zeroing the lane. Both are pure jitted
+functions so the engine's step loop stays allocation-free.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def _lane_axis(leaf_ndim: int) -> int:
+    """Cache leaves are stacked (layers, B, ...) by the model stacks."""
+    return 1
+
+
+@functools.partial(jax.jit, donate_argnums=(0,), static_argnums=(2,))
+def clear_slot(cache: Any, slot: jax.Array, ndim_hint: int = 0) -> Any:
+    def one(leaf):
+        lane = _lane_axis(leaf.ndim)
+        idx = [slice(None)] * leaf.ndim
+        zeros = jnp.zeros(leaf.shape[:lane] + (1,) + leaf.shape[lane + 1:],
+                          leaf.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(
+            leaf, zeros, slot, axis=lane)
+    return jax.tree.map(one, cache)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def write_slot(cache: Any, one_cache: Any, slot: jax.Array) -> Any:
+    """Copy a single-lane cache (B=1 prefill output) into lane ``slot``."""
+    def one(dst, src):
+        lane = _lane_axis(dst.ndim)
+        return jax.lax.dynamic_update_slice_in_dim(
+            dst, src.astype(dst.dtype), slot, axis=lane)
+    return jax.tree.map(one, cache, one_cache)

@@ -1,0 +1,96 @@
+"""Logical-axis sharding: flax-style rules without a flax dependency.
+
+Model code annotates activations with *logical* axis names via
+``shard(x, "batch", "seq", None)``. The launcher installs a mesh and a
+``{logical name -> mesh axis (or tuple, or None)}`` rule table with
+``axis_rules(...)``; outside such a context every annotation is a no-op,
+so unit tests and single-device smoke runs never touch device state.
+
+Parameter shardings use the same rule table: ``spec_for(names)`` turns a
+tuple of logical names into a ``PartitionSpec`` and ``sharding_for`` into
+a ``NamedSharding`` for jit in/out shardings.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Iterable, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+_STATE = threading.local()
+
+
+def _st():
+    if not hasattr(_STATE, "mesh"):
+        _STATE.mesh = None
+        _STATE.rules = {}
+    return _STATE
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Optional[Mesh], rules: Dict[str, Axis]):
+    """Install (mesh, logical→mesh-axis rules) for the enclosed trace."""
+    st = _st()
+    old = (st.mesh, st.rules)
+    st.mesh, st.rules = mesh, dict(rules)
+    try:
+        yield
+    finally:
+        st.mesh, st.rules = old
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _st().mesh
+
+
+def spec_for(names: Sequence[Union[str, None]]) -> P:
+    st = _st()
+    return P(*[st.rules.get(n) if isinstance(n, str) else None for n in names])
+
+
+def sharding_for(names: Sequence[Union[str, None]]) -> Optional[NamedSharding]:
+    st = _st()
+    if st.mesh is None:
+        return None
+    return NamedSharding(st.mesh, spec_for(names))
+
+
+def shard(x: jax.Array, *names: Union[str, None]) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names (no-op w/o mesh)."""
+    st = _st()
+    if st.mesh is None:
+        return x
+    spec = spec_for(names)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(st.mesh, spec))
+
+
+def tree_shardings(spec_tree, mesh: Optional[Mesh] = None):
+    """Map a pytree of logical-name tuples to NamedShardings."""
+    st = _st()
+    mesh = mesh or st.mesh
+    if mesh is None:
+        raise ValueError("tree_shardings requires a mesh")
+
+    def one(names):
+        return NamedSharding(mesh, spec_for(names))
+
+    return jax.tree.map(one, spec_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def tree_shard_like(tree, spec_tree):
+    """Constrain a pytree's shardings by a tree of logical-name tuples
+    (no-op without an installed mesh). ``spec_tree`` leaves are tuples of
+    logical names, matched against ``tree``'s array leaves."""
+    st = _st()
+    if st.mesh is None:
+        return tree
+    flat, treedef = jax.tree.flatten(tree)
+    specs = jax.tree.flatten(spec_tree,
+                             is_leaf=lambda x: isinstance(x, tuple))[0]
+    out = [shard(x, *names) for x, names in zip(flat, specs)]
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,140 @@
+"""Crossbar functional model (Eq. 3) + device encoding + quantization."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as q
+from repro.core.crossbar import (column_gain, crossbar_forward,
+                                 effective_weights, eq3_dot_product,
+                                 pairs_from_weights, wire_attenuation)
+from repro.core.device import DEFAULT_DEVICE, DeviceModel
+
+
+def test_pair_encoding_roundtrip():
+    w = jnp.linspace(-1, 1, 41)
+    gp, gn = DEFAULT_DEVICE.pair_from_weight(w)
+    back = DEFAULT_DEVICE.weight_from_pair(gp, gn)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(w), atol=1e-6)
+    # one device of each pair parks at the floor
+    assert bool(jnp.all((gp == DEFAULT_DEVICE.g_off) |
+                        (gn == DEFAULT_DEVICE.g_off)))
+
+
+def test_quantize_g_levels():
+    dev = DeviceModel()
+    g = jnp.linspace(dev.g_off, dev.g_on, 1000)
+    gq = dev.quantize_g(g)
+    step = dev.g_range / (dev.levels - 1)
+    assert float(jnp.max(jnp.abs(gq - g))) <= step / 2 + 1e-12
+    assert len(np.unique(np.asarray(gq))) <= dev.levels
+
+
+def test_eq3_is_normalized_divider():
+    """|DP| can never exceed max|x| — it is a resistive divider."""
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.uniform(k1, (32, 128), minval=-1, maxval=1)
+    gp = jax.random.uniform(k2, (128, 64), minval=8e-9, maxval=8e-6)
+    gn = jax.random.uniform(k3, (128, 64), minval=8e-9, maxval=8e-6)
+    dp = eq3_dot_product(x, gp, gn)
+    assert float(jnp.max(jnp.abs(dp))) <= float(jnp.max(jnp.abs(x))) + 1e-6
+
+
+def test_eq3_linear_in_x():
+    key = jax.random.PRNGKey(1)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.uniform(k1, (4, 128), minval=-1, maxval=1)
+    gp = jax.random.uniform(k2, (128, 64), minval=8e-9, maxval=8e-6)
+    gn = jax.random.uniform(k3, (128, 64), minval=8e-9, maxval=8e-6)
+    np.testing.assert_allclose(np.asarray(eq3_dot_product(2.0 * x, gp, gn)),
+                               np.asarray(2.0 * eq3_dot_product(x, gp, gn)),
+                               rtol=1e-5)
+
+
+def test_crossbar_forward_matches_matmul_unquantized():
+    key = jax.random.PRNGKey(2)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.uniform(k1, (16, 128), minval=-1, maxval=1)
+    w = jax.random.normal(k2, (128, 64)) * 0.2
+    out = crossbar_forward(x, w, quantize=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x @ w),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_crossbar_forward_8bit_error_budget():
+    key = jax.random.PRNGKey(3)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.uniform(k1, (64, 128), minval=-1, maxval=1)
+    w = jax.random.normal(k2, (128, 64)) * 0.2
+    out = crossbar_forward(x, w, quantize=True)
+    ref = x @ w
+    rel = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+    assert rel < 0.05  # ~7-bit device pairs → well under 5% on a tile
+
+
+def test_threshold_is_gain_invariant():
+    """The paper's pairing of Eq. 3 with a threshold activation: output
+    sign is invariant to the column divider gain."""
+    key = jax.random.PRNGKey(4)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.uniform(k1, (32, 128), minval=-1, maxval=1)
+    w = jax.random.normal(k2, (128, 64)) * 0.2
+    dp_raw = crossbar_forward(x, w, quantize=False, compensate_gain=False)
+    dp_deg = crossbar_forward(x, w, quantize=False, compensate_gain=True)
+    np.testing.assert_array_equal(np.sign(np.asarray(dp_raw)),
+                                  np.sign(np.asarray(dp_deg)))
+
+
+def test_wire_attenuation_monotone():
+    att = wire_attenuation(128, 64, 8e-6, 2.5)
+    a = np.asarray(att)
+    assert a.max() <= 1.0
+    # devices far from drivers/sense see more wire
+    assert a[0, -1] == a.max()
+    assert a[-1, 0] == a.min()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 64), st.integers(1, 32))
+def test_effective_weights_columns_sum_property(rows, cols):
+    """Each effective-weight column has |w|·Σ(σ⁺+σ⁻) = |σ⁺−σ⁻| ≤ range."""
+    key = jax.random.PRNGKey(rows * 1000 + cols)
+    k1, k2 = jax.random.split(key)
+    gp = jax.random.uniform(k1, (rows, cols), minval=8e-9, maxval=8e-6)
+    gn = jax.random.uniform(k2, (rows, cols), minval=8e-9, maxval=8e-6)
+    w_eff = effective_weights(gp, gn)
+    # Σ_i |w_eff| ≤ 1 per column: numerator ≤ denominator element-wise
+    col = np.abs(np.asarray(w_eff)).sum(axis=0)
+    assert (col <= 1.0 + 1e-6).all()
+
+
+# ---------------- quantization --------------------------------------- #
+def test_fake_quant_is_identity_gradient():
+    w = jnp.linspace(-0.9, 0.9, 31)
+    g = jax.grad(lambda w: jnp.sum(q.fake_quant(w, 8)))(w)
+    np.testing.assert_allclose(np.asarray(g), 1.0, atol=1e-6)
+
+
+def test_quantize_weights_roundtrip_bound():
+    key = jax.random.PRNGKey(5)
+    w = jax.random.normal(key, (64, 32))
+    codes, scale = q.quantize_weights(w, bits=8, per_column=True)
+    back = q.dequantize(codes, scale)
+    assert float(jnp.max(jnp.abs(back - w))) <= float(jnp.max(scale)) / 2 \
+        + 1e-6
+
+
+def test_sigmoid_lut_monotone_256_bytes():
+    lut = q.sigmoid_lut(8)
+    assert lut.shape == (256,)  # exactly the paper's 256-byte LUT (§V.A)
+    assert bool(jnp.all(jnp.diff(lut) >= 0))
+
+
+def test_threshold_ste_forward_and_grad():
+    x = jnp.array([-0.5, -1e-3, 1e-3, 0.7])
+    y = q.threshold_ste(x)
+    np.testing.assert_array_equal(np.asarray(y), [-1, -1, 1, 1])
+    g = jax.grad(lambda x: jnp.sum(q.threshold_ste(x)))(x)
+    assert (np.asarray(g) > 0).all()  # surrogate gradient flows

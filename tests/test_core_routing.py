@@ -1,0 +1,114 @@
+"""Static mesh router: XY invariants, conservation, TDM feasibility."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.paper_apps import APPS
+from repro.core.mapping import map_networks
+from repro.core.neural_core import LINK_BITS
+from repro.core.routing import (grid_shape, place, route, xy_route)
+
+
+def _mapping(app_id, system="memristor"):
+    app = APPS[app_id]
+    nets = app.memristor_nets if system == "memristor" else app.sram_nets
+    return map_networks(nets, system=system,
+                        items_per_second=app.items_per_second,
+                        sensor_flags=app.sensor_flags(system),
+                        deps=app.net_deps(system))
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.tuples(st.integers(0, 15), st.integers(0, 15)),
+       st.tuples(st.integers(0, 15), st.integers(0, 15)))
+def test_xy_route_is_manhattan_minimal(src, dst):
+    links = xy_route(src, dst)
+    assert len(links) == abs(src[0] - dst[0]) + abs(src[1] - dst[1])
+    # contiguity: each hop moves to a 4-neighbour
+    cur = src
+    for a, b in links:
+        assert a == cur
+        assert abs(a[0] - b[0]) + abs(a[1] - b[1]) == 1
+        cur = b
+    if links:
+        assert cur == dst
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.tuples(st.integers(0, 15), st.integers(0, 15)),
+       st.tuples(st.integers(0, 15), st.integers(0, 15)))
+def test_xy_route_dimension_order(src, dst):
+    """X-then-Y: the deadlock-freedom property (no YX turns)."""
+    links = xy_route(src, dst)
+    seen_y = False
+    for a, b in links:
+        if a[0] != b[0]:
+            seen_y = True
+        else:
+            assert not seen_y, "X move after Y move breaks XY ordering"
+
+
+def test_grid_and_placement_cover_all_cores():
+    m = _mapping("deep")
+    coords = place(m.cores)
+    assert len(set(coords)) == len(m.cores)
+    h, w = grid_shape(len(m.cores))
+    assert h * w >= len(m.cores)
+    assert all(0 <= r < h and 0 <= c < w for r, c in coords)
+
+
+@pytest.mark.parametrize("app_id", list(APPS))
+def test_link_conservation(app_id):
+    """Σ link loads = Σ flow bits × hops (every bit accounted per hop)."""
+    m = _mapping(app_id)
+    rep = route(m)
+    lhs = sum(rep.link_bits.values())
+    rhs = sum(f.bits * len(xy_route(f.src, f.dst)) for f in rep.flows)
+    assert lhs == rhs
+    assert rep.max_link_bits == (max(rep.link_bits.values())
+                                 if rep.link_bits else 0)
+
+
+@pytest.mark.parametrize("app_id", list(APPS))
+def test_tdm_schedule_no_overlap(app_id):
+    """Static TDM: slot ranges on each link must not collide."""
+    m = _mapping(app_id)
+    rep = route(m)
+    for link, entries in rep.schedule.items():
+        spans = sorted((s, s + n) for _, s, n in entries)
+        for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+            assert a1 <= b0, f"overlap on {link}"
+
+
+@pytest.mark.parametrize("app_id", list(APPS))
+def test_schedule_length_matches_busiest_link(app_id):
+    m = _mapping(app_id)
+    rep = route(m)
+    if not rep.schedule:
+        return
+    longest = max(s + n for entries in rep.schedule.values()
+                  for _, s, n in entries)
+    assert longest >= math.ceil(rep.max_link_bits / LINK_BITS)
+
+
+@pytest.mark.parametrize("app_id", list(APPS))
+def test_routing_rate_supports_app(app_id):
+    """The static network must not be the throughput bottleneck for the
+    paper's real-time loads (per replica)."""
+    app = APPS[app_id]
+    m = _mapping(app_id)
+    rep = route(m)
+    assert rep.max_items_per_second >= \
+        app.items_per_second / m.replication * 0.99
+
+
+def test_memristor_hidden_traffic_is_one_bit():
+    m = _mapping("deep")
+    rep = route(m)
+    # deep 784→200→100→10: mesh traffic ≈ combiner partials + hidden
+    # layers in single bits — far below 8-bit digital traffic
+    bits = m.mesh_bits_per_item()
+    d = map_networks(APPS["deep"].sram_nets, system="digital",
+                     items_per_second=APPS["deep"].items_per_second)
+    assert bits < d.mesh_bits_per_item()

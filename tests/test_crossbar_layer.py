@@ -1,0 +1,85 @@
+"""Crossbar-mode execution of arbitrary linear layers (tiling + Fig.11
+combining in the float domain) and the digital-core counterpart."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.crossbar_layer import (MLPSpec, crossbar_apply,
+                                       crossbar_linear, digital_linear,
+                                       mlp_apply, mlp_init, program_layer)
+from repro.core.neural_core import CoreGeometry
+
+
+@pytest.mark.parametrize("d_in,d_out", [
+    (128, 64),     # exactly one tile
+    (300, 70),     # ragged tiling
+    (784, 200),    # the deep network's first layer
+    (64, 200),     # wide, shallow
+])
+def test_crossbar_linear_accuracy(d_in, d_out):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.uniform(k1, (16, d_in), minval=-1, maxval=1)
+    w = jax.random.normal(k2, (d_in, d_out)) / jnp.sqrt(d_in)
+    out = crossbar_linear(x, w)
+    ref = x @ w
+    rel = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+    assert rel < 0.05, rel
+
+
+def test_crossbar_kernel_path_matches_jnp_path():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    x = jax.random.uniform(k1, (8, 300), minval=-1, maxval=1)
+    w = jax.random.normal(k2, (300, 70)) * 0.1
+    p = program_layer(w)
+    a = crossbar_apply(p, x)
+    b = crossbar_apply(p, x, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_programming_noise_stays_within_budget():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
+    x = jax.random.uniform(k1, (32, 256), minval=-1, maxval=1)
+    w = jax.random.normal(k2, (256, 64)) / 16.0
+    clean = crossbar_linear(x, w)
+    noisy = crossbar_linear(x, w, noise_key=k3)
+    ref = x @ w
+    rel = float(jnp.linalg.norm(noisy - ref) / jnp.linalg.norm(ref))
+    assert rel < 0.08
+    assert not np.allclose(np.asarray(clean), np.asarray(noisy))
+
+
+def test_digital_linear_8bit_accuracy():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    x = jax.random.uniform(k1, (16, 256), minval=-1, maxval=1)
+    w = jax.random.normal(k2, (256, 128)) / 16.0
+    out = digital_linear(x, w)
+    ref = x @ w
+    rel = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+    assert rel < 0.02, rel
+
+
+def test_digital_linear_kernel_path():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(4))
+    x = jax.random.uniform(k1, (8, 300), minval=-1, maxval=1)
+    w = jax.random.normal(k2, (300, 70)) * 0.1
+    a = digital_linear(x, w)
+    b = digital_linear(x, w, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_mlp_modes_agree_on_sign_structure():
+    """QAT + crossbar + digital modes of the same MLP should agree with
+    float mode on nearly all threshold decisions."""
+    spec = MLPSpec((64, 32, 8), activation="tanh",
+                   out_activation="linear")
+    params = mlp_init(jax.random.PRNGKey(5), spec)
+    x = jax.random.uniform(jax.random.PRNGKey(6), (64, 64),
+                           minval=-1, maxval=1)
+    ref = mlp_apply(params, x, spec, mode="float")
+    for mode in ("qat", "crossbar", "digital"):
+        out = mlp_apply(params, x, spec, mode=mode)
+        agree = float(jnp.mean((out > 0) == (ref > 0)))
+        assert agree > 0.95, (mode, agree)

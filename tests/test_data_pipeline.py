@@ -1,0 +1,89 @@
+"""Data pipeline: determinism, shardability, checkpoint/restore."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data.images import chars_like, cifar_like, mnist_like
+from repro.data.pipeline import PipelineState, TokenPipeline
+
+
+def _pipe(**kw):
+    return TokenPipeline(vocab_size=512, seq_len=32, global_batch=8, **kw)
+
+
+def test_batch_is_pure_function_of_step():
+    p = _pipe(seed=3)
+    a = p.batch(17)
+    b = p.batch(17)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    c = p.batch(18)
+    assert not np.array_equal(np.asarray(a["tokens"]),
+                              np.asarray(c["tokens"]))
+
+
+def test_labels_are_next_tokens():
+    p = _pipe()
+    b = p.batch(0)
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))
+
+
+def test_tokens_in_vocab_and_learnable_structure():
+    p = _pipe()
+    b = p.batch(5)
+    t = np.asarray(b["tokens"])
+    assert t.min() >= 0 and t.max() < 512
+    # markov structure: (31x+7)%V transitions appear far above chance
+    nxt = (t[:, :-1] * 31 + 7) % 512
+    frac = float((nxt == t[:, 1:]).mean())
+    assert frac > 0.3
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from([1, 2, 4, 8]))
+def test_host_shards_partition_global_batch(n_proc):
+    p = _pipe()
+    g = p.batch(3)
+    parts = [p.host_shard(g, i, n_proc) for i in range(n_proc)]
+    cat = np.concatenate([np.asarray(x["tokens"]) for x in parts])
+    np.testing.assert_array_equal(cat, np.asarray(g["tokens"]))
+
+
+def test_elastic_resharding_preserves_stream():
+    """Same step, different process counts → same global batch."""
+    p = _pipe()
+    g = p.batch(9)
+    a = [p.host_shard(g, i, 2) for i in range(2)]
+    b = [p.host_shard(g, i, 4) for i in range(4)]
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(x["tokens"]) for x in a]),
+        np.concatenate([np.asarray(x["tokens"]) for x in b]))
+
+
+def test_pipeline_state_roundtrip():
+    s = PipelineState(7, 123)
+    assert PipelineState.from_dict(s.as_dict()) == s
+
+
+def test_image_datasets_shapes_and_separability():
+    for fn, dim, ncls in ((mnist_like, 784, 10), (cifar_like, 3072, 10),
+                          (chars_like, 2500, 26)):
+        x, y = fn(seed=0, n=64)
+        assert x.shape == (64, dim)
+        assert float(x.min()) >= 0.0 and float(x.max()) <= 1.0
+        assert int(y.min()) >= 0 and int(y.max()) < ncls
+        # determinism
+        x2, y2 = fn(seed=0, n=64)
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(x2))
+
+
+def test_images_classes_statistically_distinct():
+    x, y = mnist_like(seed=1, n=256)
+    x, y = np.asarray(x), np.asarray(y)
+    mus = np.stack([x[y == c].mean(0) for c in range(10)
+                    if (y == c).sum() > 3])
+    d = np.linalg.norm(mus[:, None] - mus[None, :], axis=-1)
+    off = d[~np.eye(len(mus), dtype=bool)]
+    assert off.min() > 0.5  # class means well separated

@@ -1,0 +1,89 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes and dtypes (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.crossbar_mvm import crossbar_mvm as cb_kernel
+from repro.kernels.int8_matmul import int8_matmul as i8_kernel
+
+
+def _cb_operands(key, B, R, C, rows, cols):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    x = jax.random.uniform(k1, (B, R, rows), minval=-1.0, maxval=1.0)
+    gp = jax.random.uniform(k2, (R, C, rows, cols), minval=8e-9,
+                            maxval=8e-6)
+    gn = jax.random.uniform(k3, (R, C, rows, cols), minval=8e-9,
+                            maxval=8e-6)
+    ds = jax.random.uniform(k4, (R, C, cols), minval=0.2, maxval=3.0)
+    return x, gp, gn, ds
+
+
+@pytest.mark.parametrize("B,R,C,rows,cols", [
+    (1, 1, 1, 128, 64),      # single paper-geometry tile
+    (8, 1, 1, 128, 128),     # MXU-aligned tile
+    (200, 3, 2, 128, 64),    # partial batch block + reduction + col tiles
+    (128, 2, 3, 64, 32),     # small geometry
+    (5, 4, 1, 32, 16),       # deep reduction
+])
+def test_crossbar_mvm_matches_ref(B, R, C, rows, cols):
+    x, gp, gn, ds = _cb_operands(jax.random.PRNGKey(0), B, R, C, rows, cols)
+    out = cb_kernel(x, gp, gn, ds, interpret=True)
+    ref = ops.crossbar_mvm_ref(x, gp, gn, ds)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("block_b", [32, 128, 256])
+def test_crossbar_mvm_block_invariance(block_b):
+    x, gp, gn, ds = _cb_operands(jax.random.PRNGKey(1), 100, 2, 2, 128, 64)
+    out = cb_kernel(x, gp, gn, ds, block_b=block_b, interpret=True)
+    ref = ops.crossbar_mvm_ref(x, gp, gn, ds)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_crossbar_mvm_f32_input_dtypes():
+    x, gp, gn, ds = _cb_operands(jax.random.PRNGKey(2), 16, 1, 1, 128, 64)
+    out = cb_kernel(x.astype(jnp.bfloat16), gp, gn, ds, interpret=True)
+    assert out.dtype == jnp.float32
+    ref = ops.crossbar_mvm_ref(x.astype(jnp.bfloat16).astype(jnp.float32),
+                               gp, gn, ds)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,K,N", [
+    (1, 256, 128),           # one digital core (paper geometry)
+    (130, 300, 70),          # ragged everything
+    (128, 256, 128),
+    (64, 1024, 256),         # multi-block reduction
+])
+@pytest.mark.parametrize("x_dtype", [jnp.int8, jnp.uint8])
+def test_int8_matmul_matches_ref(B, K, N, x_dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    lo = 0 if x_dtype == jnp.uint8 else -127
+    x = jax.random.randint(k1, (B, K), lo, 127).astype(x_dtype)
+    w = jax.random.randint(k2, (K, N), -127, 127).astype(jnp.int8)
+    out = i8_kernel(x, w, interpret=True)
+    ref = ops.int8_matmul_ref(x, w)
+    assert out.dtype == jnp.int32
+    assert bool(jnp.all(out == ref))  # integer path must be exact
+
+
+def test_int8_matmul_accumulator_no_overflow_at_core_scale():
+    """256 synapses × (127·127) stays far below int32 — the digital
+    core's accumulator width is sufficient (§II.A)."""
+    x = jnp.full((4, 256), 255, jnp.uint8)
+    w = jnp.full((256, 128), 127, jnp.int8)
+    out = i8_kernel(x, w, interpret=True)
+    assert int(out.max()) == 255 * 127 * 256 < 2**31 - 1
+
+
+def test_ops_wrapper_wire_resistance_applied():
+    x, gp, gn, ds = _cb_operands(jax.random.PRNGKey(4), 8, 1, 1, 128, 64)
+    a = ops.crossbar_mvm(x, gp, gn, ds)
+    b = ops.crossbar_mvm(x, gp, gn, ds, r_seg=2.5)
+    assert not np.allclose(np.asarray(a), np.asarray(b))

@@ -1,0 +1,83 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step
+on CPU, asserting output shapes and no NaNs (assignment deliverable f)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.models import model as M
+from repro.models.stubs import make_batch
+
+B, S = 2, 32
+
+
+def _setup(arch):
+    cfg = get_reduced(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, jax.random.PRNGKey(1), B, S)
+    return cfg, params, batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    assert cfg.name == arch
+    assert cfg.num_layers > 0 and cfg.d_model > 0 and cfg.vocab_size > 0
+    assert cfg.padded_vocab >= cfg.vocab_size
+    assert cfg.padded_vocab % 512 == 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_grad(arch):
+    cfg, params, batch = _setup(arch)
+
+    def loss(p):
+        return M.loss_fn(cfg, p, batch)[0]
+
+    val, grads = jax.jit(jax.value_and_grad(loss))(params)
+    assert jnp.isfinite(val), f"{arch}: loss not finite"
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert jnp.isfinite(gnorm), f"{arch}: grad not finite"
+    assert gnorm > 0, f"{arch}: zero gradient"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_logit_shapes(arch):
+    cfg, params, batch = _setup(arch)
+    h, _, _ = M.forward(cfg, params, batch, mode="train")
+    assert h.shape == (B, S, cfg.d_model)
+    assert jnp.isfinite(h.astype(jnp.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch):
+    """decode_step after an (S-1)-token prefill must reproduce the
+    prefill logits of the full S-token sequence at the last position."""
+    cfg, params, batch = _setup(arch)
+    if cfg.frontend != "none":
+        pytest.skip("stub-frontend archs decode from tokens only")
+    tokens = batch["tokens"]
+
+    full_logits, _ = jax.jit(
+        lambda p, b: M.prefill(cfg, p, b))(params, {"tokens": tokens})
+
+    _, cache = jax.jit(lambda p, b: M.prefill(cfg, p, b))(
+        params, {"tokens": tokens[:, :S - 1]})
+    # pad ring caches up to the decode allocation if needed
+    dec_logits, _ = jax.jit(
+        lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))(
+        params, cache, tokens[:, S - 1:], jnp.asarray(S - 1, jnp.int32))
+
+    err = jnp.max(jnp.abs(full_logits.astype(jnp.float32) -
+                          dec_logits.astype(jnp.float32)))
+    scale = jnp.max(jnp.abs(full_logits.astype(jnp.float32))) + 1e-6
+    assert err / scale < 0.08, f"{arch}: decode mismatch rel={err/scale}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_positive(arch):
+    cfg = get_reduced(arch)
+    n = M.count_params(cfg)
+    na = M.count_params(cfg, active_only=True)
+    assert n > 0 and 0 < na <= n

@@ -1,0 +1,57 @@
+"""GPipe pipeline schedule == sequential reference (subprocess with 4
+host devices so the parent runtime keeps one CPU device)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from repro.launch.pipeline import bubble_fraction
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json
+    import jax, jax.numpy as jnp
+    from repro.launch.pipeline import pipeline_apply
+
+    S, B, D, M = 4, 8, 16, 4
+    mesh = jax.make_mesh((S,), ("pod",))
+    key = jax.random.PRNGKey(0)
+    kw, kx = jax.random.split(key)
+    # one linear+tanh block per stage
+    W = jax.random.normal(kw, (S, D, D)) / jnp.sqrt(D)
+    x = jax.random.normal(kx, (B, D))
+
+    def stage_fn(w, h):
+        return jnp.tanh(h @ w)
+
+    out = pipeline_apply(stage_fn, W, x, mesh=mesh, axis="pod",
+                         microbatches=M)
+
+    ref = x
+    for s in range(S):
+        ref = jnp.tanh(ref @ W[s])
+
+    err = float(jnp.max(jnp.abs(out - ref)))
+    print(json.dumps({"err": err}))
+""")
+
+
+def test_pipeline_matches_sequential():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))), timeout=300)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["err"] < 1e-5, res
+
+
+def test_bubble_fraction():
+    assert bubble_fraction(2, 2) == 1 / 3
+    assert bubble_fraction(4, 12) == 3 / 15
+    assert bubble_fraction(1, 8) == 0.0

@@ -1,0 +1,47 @@
+"""System-level integration: the paper's pipeline end-to-end — map an
+app, program its crossbars, push data through the functional model, and
+check cost accounting consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_apps import APPS
+from repro.core.costmodel import app_costs
+from repro.core.crossbar_layer import (MLPSpec, mlp_apply, mlp_init)
+from repro.core.mapping import map_networks
+from repro.core.routing import route
+
+
+def test_end_to_end_deep_pipeline():
+    """MNIST-geometry network: map → route → execute functionally in
+    crossbar mode → outputs are finite, correct shape, and the mapped
+    system meets the real-time budget."""
+    app = APPS["deep"]
+    m = map_networks(app.memristor_nets, system="memristor",
+                     items_per_second=app.items_per_second)
+    rep = route(m)
+    assert rep.max_items_per_second >= \
+        app.items_per_second / m.replication
+
+    spec = MLPSpec((784, 200, 100, 10), activation="threshold")
+    params = mlp_init(jax.random.PRNGKey(0), spec)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (32, 784),
+                           minval=0, maxval=1)
+    out = mlp_apply(params, x, spec, mode="crossbar")
+    assert out.shape == (32, 10)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_cost_model_consistency_across_apps():
+    for app_id, app in APPS.items():
+        costs = app_costs(app)
+        assert costs["1t1m"].power_mw < costs["digital"].power_mw \
+            < costs["risc"].power_mw
+        assert costs["1t1m"].area_mm2 < costs["risc"].area_mm2
+
+
+def test_public_api_imports():
+    import repro.core as core
+    for name in ("crossbar_linear", "map_networks", "route", "table1",
+                 "DeviceModel", "CoreGeometry"):
+        assert hasattr(core, name)
