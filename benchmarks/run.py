@@ -41,6 +41,13 @@ def main():
     for name, res in results.items():
         status = "PASS" if res.get("pass") else "FAIL"
         print(f"  {name:>18s}: {status}  ({res['seconds']}s)")
+    # kernel perf trajectory: full kernel-suite result (wall-clock
+    # old-vs-new, oracle errors, tile stats) at the repo root so every
+    # PR's numbers are tracked in-tree. Never clobber the committed
+    # record with an error stub from a crashed/transiently-failed run.
+    if "wallclock" in results["kernels"]:
+        path = kernel_bench.write_bench_json(results["kernels"])
+        print(f"kernel perf record: {path}")
     with open("bench_results.json", "w") as f:
         json.dump({k: {kk: vv for kk, vv in v.items()
                        if kk in ("pass", "seconds", "error")}

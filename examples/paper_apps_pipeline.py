@@ -17,7 +17,7 @@ from repro.configs.paper_apps import APPS
 from repro.core.costmodel import specialized_cost
 from repro.data.images import sensor_stream
 from repro.optim.qat import train_mlp
-from repro.core.crossbar_layer import crossbar_linear
+from repro.core.crossbar_layer import program_mlp, programmed_mlp_apply
 
 
 def sobel_reference(img):
@@ -51,13 +51,21 @@ def main():
     t = train_mlp(np.asarray(X), np.asarray(y), (9, 20, 2),
                   activation="sigmoid", weight_bits=8, act_bits=8,
                   steps=800, lr=0.5)
-    # deploy on crossbars
-    h = crossbar_linear(X, t["params"][0]["w"]) + t["params"][0]["b"]
-    h = jax.nn.sigmoid(h)
-    out = crossbar_linear(h, t["params"][1]["w"]) + t["params"][1]["b"]
+    # deploy on crossbars: program the chip ONCE, then stream frames
+    # through the programmed state (no per-inference re-encoding)
+    chip = program_mlp(t["params"], t["spec"], mode="crossbar")
+    out = programmed_mlp_apply(chip, X)
     pred = jnp.argmax(out, -1)
     agree = float(jnp.mean(pred == y))
     print(f"  deployed-vs-Sobel edge agreement: {100 * agree:.1f}%")
+    for fi, frame in enumerate(frames[1:3], start=1):
+        Xf = windows3x3(frame) - 0.5
+        pf = jnp.argmax(programmed_mlp_apply(chip, Xf), -1)
+        reff = sobel_reference(frame).reshape(-1)
+        yf = (reff > jnp.percentile(reff, 50)).astype(jnp.int32)
+        af = float(jnp.mean(pf == yf))
+        print(f"  streamed frame {fi} through the same programmed chip: "
+              f"{100 * af:.1f}% agreement")
 
     # -- motion: pixel deviation between frames ------------------------ #
     print("== motion estimation: 8x8 grid deviations ==")

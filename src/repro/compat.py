@@ -1,0 +1,28 @@
+"""jax version compatibility shims.
+
+The repo targets current jax but must run on the 0.4.x line baked into
+the CI container, where ``jax.shard_map`` still lives in
+``jax.experimental.shard_map`` and ``jax.make_mesh`` does not accept
+``axis_types`` yet. Every call site imports from here instead of
+branching locally.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.6 top-level export
+    shard_map = jax.shard_map
+except AttributeError:  # 0.4.x line
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def make_auto_mesh(shape, axis_names):
+    """jax.make_mesh with Auto axis types where supported (newer jax
+    defaults to Explicit sharding otherwise); plain make_mesh on the
+    0.4.x line, whose meshes are always Auto."""
+    try:
+        return jax.make_mesh(
+            shape, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    except AttributeError:
+        return jax.make_mesh(shape, axis_names)

@@ -4,9 +4,12 @@ static mesh router, and the Tables I–VI cost model."""
 from repro.core.crossbar import (column_gain, crossbar_forward,
                                  effective_weights, eq3_dot_product,
                                  pairs_from_weights)
-from repro.core.crossbar_layer import (CrossbarParams, crossbar_apply,
-                                       crossbar_linear, digital_linear,
-                                       program_layer)
+from repro.core.crossbar_layer import (CrossbarParams, DigitalParams,
+                                       ProgrammedMLP, crossbar_apply,
+                                       crossbar_linear, digital_apply,
+                                       digital_linear, program_digital,
+                                       program_layer, program_mlp,
+                                       programmed_mlp_apply)
 from repro.core.device import DEFAULT_DEVICE, DeviceModel
 from repro.core.mapping import (Mapping, Unit, map_networks, nn_macs,
                                 risc_cores_needed, split_networks)

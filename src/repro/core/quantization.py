@@ -141,5 +141,6 @@ def make_activation(kind: str) -> Callable[[jax.Array], jax.Array]:
         "threshold": threshold_ste,
         "sigmoid": jax.nn.sigmoid,
         "tanh": jnp.tanh,
+        "relu": jax.nn.relu,
         "linear": lambda x: x,
     }[kind]

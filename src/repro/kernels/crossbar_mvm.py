@@ -1,22 +1,39 @@
-"""Pallas TPU kernel: tiled differential-pair crossbar MVM (Eq. 3).
+"""Pallas TPU kernel: tiled differential-pair crossbar MVM (Eq. 3),
+program-once / stream-many edition.
 
 Hardware adaptation (DESIGN.md §2): the paper's analog crossbar
 evaluates a whole weight-stationary tile in one step; the TPU-native
-equivalent is an MXU pass over a VMEM-resident tile. The kernel fuses
-the three stages the analog circuit performs in one shot:
+equivalent is an MXU pass over a VMEM-resident tile. The paper's split
+between *programming* (slow, once) and *streaming evaluation* (fast,
+millions of times) is mirrored exactly:
 
-  1. differential combine     w = σ⁺ − σ⁻          (VPU, elementwise)
-  2. dot product              num = x @ w           (MXU)
-  3. divider normalization    out += num·descale/Σ(σ⁺+σ⁻)   (VPU)
+  program time (core/crossbar_layer.program_layer):
+    - tile + differential-encode the weights,
+    - fold Eq. 3's divider Σ(σ⁺+σ⁻), the per-tile weight scale and the
+      wire-attenuation correction into ONE per-tile-column `scale`.
+  evaluate time (this kernel — the streaming hot path):
+    1. differential combine   w = σ⁺ − σ⁻          (VPU, elementwise)
+    2. dot product            num = x @ w           (MXU)
+    3. folded rescale         acc += num · scale    (VPU, one FMA)
+    4. epilogue (last chunk)  out = act(acc + bias) (VPU, fused)
 
-so the conductance pair never round-trips to HBM between stages.
+The input-independent divider is *not* recomputed per inference — that
+is the whole point of Eq. 3's observation that the column gain depends
+only on the programmed state. The kernel inner loop is therefore pure
+MXU work plus two vector FMAs, and bias + activation never round-trip
+to HBM.
 
 Grid = (B-blocks, column-tiles, row-chunks); the row-chunk axis is the
 reduction (Fig. 11 combining) and runs innermost, accumulating into the
 output block, which stays resident in VMEM across the reduction
-("revisiting" schedule). Tile geometry mirrors the paper's crossbar
-cores: rows=128 is MXU-aligned; cols=64 is the paper's geometry (the
-beyond-paper 128×128 geometry fills MXU lanes — see EXPERIMENTS.md).
+("revisiting" schedule). The first two grid axes are declared
+`parallel` (dimension_semantics) so Mosaic may reorder/parallelize
+them; only the reduction is `arbitrary`. Tile geometry mirrors the
+paper's crossbar cores: rows=128 is MXU-aligned; cols=64 is the paper's
+geometry (the beyond-paper 128×128 geometry fills MXU lanes).
+
+An optional bf16 input path casts the combined tile to bf16 so the MXU
+pass runs at bf16×bf16→f32 throughput; accumulation stays f32.
 
 VMEM budget per step (f32): x (Bt·rows) + gp,gn (2·rows·cols) + out
 (Bt·cols) ≈ 4·(128·128·3) B ≈ 200 KiB at Bt=128 — comfortably inside
@@ -29,9 +46,13 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import ACTIVATIONS as _ACTIVATIONS
 
 
-def _kernel(x_ref, gp_ref, gn_ref, descale_ref, o_ref):
+def _kernel(x_ref, gp_ref, gn_ref, scale_ref, bias_ref, o_ref, *,
+            n_rowchunks: int, activation: str):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
@@ -39,23 +60,36 @@ def _kernel(x_ref, gp_ref, gn_ref, descale_ref, o_ref):
     x = x_ref[:, 0, :]    # (Bt, rows)
     gp = gp_ref[0, 0]     # (rows, cols)
     gn = gn_ref[0, 0]
-    descale = descale_ref[0, 0]  # (cols,)
+    scale = scale_ref[0, 0]  # (cols,) — folded descale/Σ(σ⁺+σ⁻)
 
     w = gp - gn
-    den = jnp.sum(gp + gn, axis=0)                  # (cols,)
+    if x.dtype == jnp.bfloat16:
+        w = w.astype(jnp.bfloat16)
     num = jnp.dot(x, w, preferred_element_type=jnp.float32)
-    o_ref[:, 0, :] += num * (descale / den)[None, :]
+    o_ref[:, 0, :] += num * scale[None, :]
+
+    @pl.when(pl.program_id(2) == n_rowchunks - 1)
+    def _epilogue():
+        acc = o_ref[:, 0, :] + bias_ref[0][None, :]
+        o_ref[:, 0, :] = _ACTIVATIONS[activation](acc)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("block_b", "interpret"))
+                   static_argnames=("activation", "block_b", "interpret"))
 def crossbar_mvm(x: jax.Array, gp: jax.Array, gn: jax.Array,
-                 descale: jax.Array, *, block_b: int = 128,
+                 scale: jax.Array, bias: jax.Array | None = None, *,
+                 activation: str = "linear", block_b: int = 128,
                  interpret: bool = False) -> jax.Array:
-    """x: (B, R, rows) f32; gp/gn: (R, C, rows, cols) f32;
-    descale: (R, C, cols) f32 → (B, C*cols) f32."""
+    """x: (B, R, rows) f32/bf16; gp/gn: (R, C, rows, cols) f32;
+    scale: (R, C, cols) f32 (program-time folded divider + descale);
+    bias: (C*cols,) f32 or None → (B, C*cols) f32 = act(Σ_r x·w·s + b).
+    """
+    if activation not in _ACTIVATIONS:
+        raise ValueError(f"unsupported fused activation: {activation!r}")
     B, R, rows = x.shape
     _, C, _, cols = gp.shape
+    if bias is None:
+        bias = jnp.zeros((C * cols,), jnp.float32)
     bt = min(block_b, B)
     pad_b = (-B) % bt
     if pad_b:
@@ -64,18 +98,34 @@ def crossbar_mvm(x: jax.Array, gp: jax.Array, gn: jax.Array,
         x = jnp.pad(x, ((0, pad_b), (0, 0), (0, 0)))
     nb = x.shape[0] // bt
 
+    if x.dtype != jnp.bfloat16:
+        x = x.astype(jnp.float32)
+    flops = 2 * x.shape[0] * R * rows * C * cols + 2 * x.shape[0] * C * cols
+    bytes_accessed = (x.size * x.dtype.itemsize + 2 * gp.size * 4 +
+                      scale.size * 4 + bias.size * 4 +
+                      x.shape[0] * C * cols * 4)
+    transcendentals = (x.shape[0] * C * cols
+                       if activation in ("sigmoid", "tanh") else 0)
+
     out = pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, n_rowchunks=R, activation=activation),
         grid=(nb, C, R),
         in_specs=[
             pl.BlockSpec((bt, 1, rows), lambda b, c, r: (b, r, 0)),
             pl.BlockSpec((1, 1, rows, cols), lambda b, c, r: (r, c, 0, 0)),
             pl.BlockSpec((1, 1, rows, cols), lambda b, c, r: (r, c, 0, 0)),
             pl.BlockSpec((1, 1, cols), lambda b, c, r: (r, c, 0)),
+            pl.BlockSpec((1, cols), lambda b, c, r: (c, 0)),
         ],
         out_specs=pl.BlockSpec((bt, 1, cols), lambda b, c, r: (b, c, 0)),
         out_shape=jax.ShapeDtypeStruct((x.shape[0], C, cols), jnp.float32),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        cost_estimate=pl.CostEstimate(flops=flops,
+                                      bytes_accessed=bytes_accessed,
+                                      transcendentals=transcendentals),
         interpret=interpret,
-    )(x.astype(jnp.float32), gp.astype(jnp.float32),
-      gn.astype(jnp.float32), descale.astype(jnp.float32))
+    )(x, gp.astype(jnp.float32), gn.astype(jnp.float32),
+      scale.astype(jnp.float32),
+      bias.astype(jnp.float32).reshape(C, cols))
     return out[:B].reshape(B, C * cols)

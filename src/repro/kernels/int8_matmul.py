@@ -5,9 +5,21 @@ The digital core multiplies 8-bit synapses with 8-bit inputs into
 int8×int8→int32 MXU pass; the kernel keeps a (K-blocked) int32
 accumulator resident in VMEM, mirroring the core's accumulator bank.
 
-Grid = (B-blocks, N-blocks, K-blocks); K innermost (reduction). Block
-shapes default to MXU-native 128 tiles (a digital core *is* a
-256×128 array — exactly two K-blocks by one N-block).
+Program-once / stream-many: the digital core's requantization
+constants (weight scale, zero-point correction) are fixed when the
+synapse SRAM is written, so `digital_linear`'s epilogue
+
+    out = act(acc · scale + offset)        (scale/offset per neuron)
+
+is fused into the final K-step of the kernel — one kernel call replaces
+kernel + 4 jnp ops, and the int32 accumulator never round-trips to HBM.
+Without `scale` the kernel returns the raw int32 accumulator (the bare
+MAC-array datapath, used by the kernel-vs-oracle tests).
+
+Grid = (B-blocks, N-blocks, K-blocks); K innermost (reduction), B/N
+declared `parallel` for Mosaic. Block shapes default to MXU-native 128
+tiles (a digital core *is* a 256×128 array — exactly two K-blocks by
+one N-block).
 """
 from __future__ import annotations
 
@@ -16,9 +28,12 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import ACTIVATIONS as _ACTIVATIONS
 
 
-def _kernel(x_ref, w_ref, o_ref):
+def _kernel_raw(x_ref, w_ref, o_ref):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
@@ -28,6 +43,25 @@ def _kernel(x_ref, w_ref, o_ref):
     o_ref[...] += jax.lax.dot_general(
         x, w, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.int32)
+
+
+def _kernel_fused(x_ref, w_ref, scale_ref, offset_ref, o_ref, acc_ref, *,
+                  n_kblocks: int, activation: str):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(pl.program_id(2) == n_kblocks - 1)
+    def _epilogue():
+        y = (acc_ref[...].astype(jnp.float32) * scale_ref[0][None, :] +
+             offset_ref[0][None, :])
+        o_ref[...] = _ACTIVATIONS[activation](y)
 
 
 def _pad_dim(a: jax.Array, axis: int, mult: int) -> jax.Array:
@@ -40,12 +74,22 @@ def _pad_dim(a: jax.Array, axis: int, mult: int) -> jax.Array:
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("block_b", "block_n", "block_k",
-                                    "interpret"))
-def int8_matmul(x: jax.Array, w: jax.Array, *, block_b: int = 128,
+                   static_argnames=("activation", "block_b", "block_n",
+                                    "block_k", "interpret"))
+def int8_matmul(x: jax.Array, w: jax.Array,
+                scale: jax.Array | None = None,
+                offset: jax.Array | None = None, *,
+                activation: str = "linear", block_b: int = 128,
                 block_n: int = 128, block_k: int = 256,
                 interpret: bool = False) -> jax.Array:
-    """x: (B, K) int8/uint8; w: (K, N) int8 → (B, N) int32."""
+    """x: (B, K) int8/uint8; w: (K, N) int8.
+
+    scale is None  → (B, N) int32 raw accumulator.
+    scale: (N,) f32 (offset: (N,) f32, default 0) →
+        (B, N) f32 = act(acc·scale + offset), epilogue fused in-kernel.
+    """
+    if activation not in _ACTIVATIONS:
+        raise ValueError(f"unsupported fused activation: {activation!r}")
     B, K = x.shape
     _, N = w.shape
     bb, bn, bk = min(block_b, B), min(block_n, N), min(block_k, K)
@@ -54,17 +98,53 @@ def int8_matmul(x: jax.Array, w: jax.Array, *, block_b: int = 128,
     # accumulate garbage.
     xp = _pad_dim(_pad_dim(x, 0, bb), 1, bk)
     wp = _pad_dim(_pad_dim(w, 0, bk), 1, bn)
+    grid = (xp.shape[0] // bb, wp.shape[1] // bn, xp.shape[1] // bk)
+    compiler_params = pltpu.TPUCompilerParams(
+        dimension_semantics=("parallel", "parallel", "arbitrary"))
+    cost = pl.CostEstimate(
+        flops=2 * xp.shape[0] * xp.shape[1] * wp.shape[1],
+        bytes_accessed=(xp.size + wp.size +
+                        xp.shape[0] * wp.shape[1] * 4),
+        transcendentals=(xp.shape[0] * wp.shape[1]
+                         if activation in ("sigmoid", "tanh") else 0))
 
+    if scale is None:
+        out = pl.pallas_call(
+            _kernel_raw,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bb, bk), lambda b, n, k: (b, k)),
+                pl.BlockSpec((bk, bn), lambda b, n, k: (k, n)),
+            ],
+            out_specs=pl.BlockSpec((bb, bn), lambda b, n, k: (b, n)),
+            out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]),
+                                           jnp.int32),
+            compiler_params=compiler_params,
+            cost_estimate=cost,
+            interpret=interpret,
+        )(xp, wp)
+        return out[:B, :N]
+
+    if offset is None:
+        offset = jnp.zeros((N,), jnp.float32)
+    sp = _pad_dim(scale.astype(jnp.float32).reshape(1, -1), 1, bn)
+    op = _pad_dim(offset.astype(jnp.float32).reshape(1, -1), 1, bn)
     out = pl.pallas_call(
-        _kernel,
-        grid=(xp.shape[0] // bb, wp.shape[1] // bn, xp.shape[1] // bk),
+        functools.partial(_kernel_fused, n_kblocks=grid[2],
+                          activation=activation),
+        grid=grid,
         in_specs=[
             pl.BlockSpec((bb, bk), lambda b, n, k: (b, k)),
             pl.BlockSpec((bk, bn), lambda b, n, k: (k, n)),
+            pl.BlockSpec((1, bn), lambda b, n, k: (0, n)),
+            pl.BlockSpec((1, bn), lambda b, n, k: (0, n)),
         ],
         out_specs=pl.BlockSpec((bb, bn), lambda b, n, k: (b, n)),
         out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]),
-                                       jnp.int32),
+                                       jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bb, bn), jnp.int32)],
+        compiler_params=compiler_params,
+        cost_estimate=cost,
         interpret=interpret,
-    )(xp, wp)
+    )(xp, wp, sp, op)
     return out[:B, :N]

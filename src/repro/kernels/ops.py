@@ -5,6 +5,12 @@ on the CPU backend (this container, CI) kernels run in ``interpret=True``
 mode — the kernel body executes in Python with the same block schedule,
 which is exactly what the per-kernel allclose tests validate against
 ``ref.py``. On TPU the same calls compile to Mosaic.
+
+Program-once contract: every input-independent transform (Eq. 3's
+divider, the per-tile weight descale, wire attenuation, requantization
+constants) is folded into the operands at *program* time
+(core/crossbar_layer.program_layer / program_digital) — these wrappers
+are the pure streaming-evaluate path and take the folded operands as-is.
 """
 from __future__ import annotations
 
@@ -21,33 +27,33 @@ def _interpret() -> bool:
 
 
 def crossbar_mvm(x: jax.Array, gp: jax.Array, gn: jax.Array,
-                 descale: jax.Array, *, r_seg: float = 0.0,
+                 scale: jax.Array, bias: jax.Array | None = None, *,
+                 activation: str = "linear",
                  block_b: int = 128) -> jax.Array:
-    """Tiled differential crossbar MVM. x: (B, R, rows);
-    gp/gn: (R, C, rows, cols); descale: (R, C, cols) → (B, C·cols).
-
-    Wire-resistance correction (r_seg > 0) is a program-time transform
-    of the conductances, so it is applied to the operands here — the
-    kernel itself always computes the ideal Eq. 3.
+    """Tiled differential crossbar MVM with fused epilogue.
+    x: (B, R, rows) f32/bf16; gp/gn: (R, C, rows, cols);
+    scale: (R, C, cols) program-time folded divider + descale;
+    bias: (C·cols,) or None → (B, C·cols) = act(Σ_r x·(gp−gn)·scale + b).
     """
-    if r_seg:
-        from repro.core.crossbar import wire_attenuation
-        from repro.core.device import DEFAULT_DEVICE
-        att = wire_attenuation(gp.shape[2], gp.shape[3],
-                               float(DEFAULT_DEVICE.g_on), r_seg)
-        gp = gp * att
-        gn = gn * att
-    return _cb.crossbar_mvm(x, gp, gn, descale, block_b=block_b,
+    return _cb.crossbar_mvm(x, gp, gn, scale, bias,
+                            activation=activation, block_b=block_b,
                             interpret=_interpret())
 
 
-def int8_matmul(x: jax.Array, w: jax.Array, *, block_b: int = 128,
+def int8_matmul(x: jax.Array, w: jax.Array,
+                scale: jax.Array | None = None,
+                offset: jax.Array | None = None, *,
+                activation: str = "linear", block_b: int = 128,
                 block_n: int = 128, block_k: int = 256) -> jax.Array:
-    """int8×int8→int32 MAC array (the SRAM digital core datapath)."""
-    return _i8.int8_matmul(x, w, block_b=block_b, block_n=block_n,
+    """int8×int8→int32 MAC array (the SRAM digital core datapath).
+    With ``scale`` (per-neuron requantize) the fused epilogue
+    act(acc·scale + offset) runs in-kernel and the result is f32."""
+    return _i8.int8_matmul(x, w, scale, offset, activation=activation,
+                           block_b=block_b, block_n=block_n,
                            block_k=block_k, interpret=_interpret())
 
 
 # re-export oracles for tests/benchmarks
 crossbar_mvm_ref = ref.crossbar_mvm_ref
 int8_matmul_ref = ref.int8_matmul_ref
+int8_matmul_fused_ref = ref.int8_matmul_fused_ref

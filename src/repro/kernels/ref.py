@@ -2,31 +2,62 @@
 
 These define the semantics the kernels must match bit-for-bit (up to
 float accumulation order): the tiled differential-pair crossbar MVM
-(Eq. 3 per tile + Fig. 11 combining over row-chunks) and the SRAM
-digital core's int8 MAC array.
+(Eq. 3 per tile, with the input-independent divider folded into a
+program-time `scale`, + Fig. 11 combining over row-chunks, + fused
+bias/activation epilogue) and the SRAM digital core's int8 MAC array
+with its fused requantize epilogue.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+# The single source of truth for fused-epilogue activations: both
+# Pallas kernels import this table, so kernel and oracle can never
+# drift. "threshold" is the memristor inverter pair (±1 rails);
+# "linear" is the identity used by Fig. 11 combiner neurons.
+ACTIVATIONS = {
+    "linear": lambda v: v,
+    "threshold": lambda v: jnp.where(v >= 0, 1.0, -1.0).astype(v.dtype),
+    "sigmoid": jax.nn.sigmoid,
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+}
+
 
 def crossbar_mvm_ref(x: jax.Array, gp: jax.Array, gn: jax.Array,
-                     descale: jax.Array) -> jax.Array:
-    """x: (B, R, rows); gp/gn: (R, C, rows, cols); descale: (R, C, cols)
-    → (B, C*cols).
+                     scale: jax.Array, bias: jax.Array | None = None,
+                     *, activation: str = "linear") -> jax.Array:
+    """x: (B, R, rows); gp/gn: (R, C, rows, cols); scale: (R, C, cols)
+    → (B, C*cols) f32.
 
-    Per tile: DP = (x_r @ (gp−gn)) / Σ(gp+gn)   (Eq. 3)
-    then de-gained by `descale` and summed over row-chunks r (the
-    combining step of Fig. 11 in the float domain).
+    Per tile: num = x_r @ (gp−gn), then num·scale — `scale` is the
+    program-time fold of Eq. 3's divider Σ(gp+gn), the per-tile weight
+    descale and any wire-attenuation correction (see
+    core/crossbar_layer.program_layer) — summed over row-chunks r (the
+    combining step of Fig. 11 in the float domain), then the fused
+    epilogue act(· + bias).
     """
     w = (gp - gn).astype(jnp.float32)                       # (R,C,rows,cols)
-    den = jnp.sum((gp + gn).astype(jnp.float32), axis=2)    # (R,C,cols)
     num = jnp.einsum("brk,rckn->brcn", x.astype(jnp.float32), w)
-    out = jnp.sum(num / den[None] * descale[None], axis=1)  # (B,C,cols)
-    return out.reshape(x.shape[0], -1)
+    out = jnp.sum(num * scale[None].astype(jnp.float32), axis=1)
+    out = out.reshape(x.shape[0], -1)                       # (B, C*cols)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)[None, :]
+    return ACTIVATIONS[activation](out)
 
 
 def int8_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
     """x: (B, K) int8/uint8 codes; w: (K, N) int8 → (B, N) int32."""
     return jnp.dot(x.astype(jnp.int32), w.astype(jnp.int32))
+
+
+def int8_matmul_fused_ref(x: jax.Array, w: jax.Array, scale: jax.Array,
+                          offset: jax.Array | None = None, *,
+                          activation: str = "linear") -> jax.Array:
+    """Fused digital-core epilogue: act(acc·scale + offset), f32."""
+    acc = int8_matmul_ref(x, w).astype(jnp.float32)
+    y = acc * scale.astype(jnp.float32)[None, :]
+    if offset is not None:
+        y = y + offset.astype(jnp.float32)[None, :]
+    return ACTIVATIONS[activation](y)

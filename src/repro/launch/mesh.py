@@ -17,22 +17,20 @@ from typing import Dict, Optional
 
 import jax
 
+from repro.compat import make_auto_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_auto_mesh(shape, axes)
 
 
 def make_debug_mesh(n_devices: Optional[int] = None, model: int = 2):
     """Small mesh over however many (host) devices exist — for tests."""
     n = n_devices or len(jax.devices())
     model = math.gcd(model, n)
-    return jax.make_mesh(
-        (n // model, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_auto_mesh((n // model, model), ("data", "model"))
 
 
 def mesh_axis_sizes(mesh) -> Dict[str, int]:

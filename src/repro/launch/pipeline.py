@@ -31,6 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def stage_index(axis: str = "pod"):
     return jax.lax.axis_index(axis)
@@ -100,7 +102,7 @@ def pipeline_apply(stage_fn: Callable, stage_params, x: jax.Array, *,
         return outs.reshape(B, *xs.shape[1:])
 
     pspec = jax.tree.map(lambda _: P(axis), stage_params)
-    return jax.shard_map(per_stage, mesh=mesh,
+    return shard_map(per_stage, mesh=mesh,
                          in_specs=(pspec, P()), out_specs=P())(
         stage_params, x)
 

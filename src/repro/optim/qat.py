@@ -72,8 +72,14 @@ def train_mlp(x, y, dims, *, activation: str, weight_bits: int,
 
 
 def accuracy(params, spec, x, y, *, mode: str, weight_bits: int = 8,
-             act_bits: int = 8) -> float:
+             act_bits: int = 8, programmed=None) -> float:
+    """Classification accuracy in any Fig. 12 mode. For the deployed
+    modes ("crossbar"/"digital") pass ``programmed`` (a ProgrammedMLP
+    from program_mlp) to evaluate against already-programmed chip
+    state; otherwise mlp_apply's program-once memo ensures repeated
+    accuracy() calls never re-encode the weights."""
     from repro.core.crossbar_layer import mlp_apply
     logits = mlp_apply(params, x, spec, weight_bits=weight_bits,
-                       act_bits=act_bits, mode=mode)
+                       act_bits=act_bits, mode=mode,
+                       programmed=programmed)
     return float(jnp.mean(jnp.argmax(logits, -1) == y))

@@ -20,6 +20,7 @@ from typing import Any, Optional, Tuple
 
 import jax
 
+from repro.compat import make_auto_mesh
 from repro.launch import mesh as mesh_lib
 from repro.launch.rules import make_rules
 from repro.sharding import axis_rules, tree_shardings
@@ -29,9 +30,8 @@ from repro.train import checkpoint as ckpt_lib
 def best_mesh_for(n_devices: int, model_parallel: int = 1):
     """Largest (data, model) mesh for the surviving device count."""
     model = math.gcd(model_parallel, n_devices)
-    return jax.make_mesh(
-        (n_devices // model, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_auto_mesh((n_devices // model, model),
+                          ("data", "model"))
 
 
 def remesh(ckpt_dir: str, step: Optional[int], cfg, *,

@@ -3,6 +3,8 @@ and reproduction of the paper's published core counts."""
 import math
 
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.paper_apps import APPS, PAPER_TABLES

@@ -2,6 +2,8 @@
 import math
 
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.paper_apps import APPS

@@ -1,14 +1,18 @@
 """Crossbar-mode execution of arbitrary linear layers (tiling + Fig.11
-combining in the float domain) and the digital-core counterpart."""
+combining in the float domain), the digital-core counterpart, and the
+program-once / stream-many contract."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import crossbar_layer as cbl
 from repro.core.crossbar_layer import (MLPSpec, crossbar_apply,
-                                       crossbar_linear, digital_linear,
-                                       mlp_apply, mlp_init, program_layer)
-from repro.core.neural_core import CoreGeometry
+                                       crossbar_linear, digital_apply,
+                                       digital_linear, mlp_apply,
+                                       mlp_init, program_digital,
+                                       program_layer, program_mlp,
+                                       programmed_mlp_apply)
 
 
 @pytest.mark.parametrize("d_in,d_out", [
@@ -35,6 +39,50 @@ def test_crossbar_kernel_path_matches_jnp_path():
     a = crossbar_apply(p, x)
     b = crossbar_apply(p, x, use_kernel=True)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("activation", ["threshold", "sigmoid", "relu"])
+def test_crossbar_apply_fused_bias_activation(activation):
+    """Fused bias+activation: kernel epilogue vs jnp path, ragged."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(8), 3)
+    x = jax.random.uniform(k1, (19, 300), minval=-1, maxval=1)
+    w = jax.random.normal(k2, (300, 70)) * 0.1
+    b = jax.random.normal(k3, (70,)) * 0.1
+    p = program_layer(w)
+    a = crossbar_apply(p, x, bias=b, activation=activation)
+    bk = crossbar_apply(p, x, bias=b, activation=activation,
+                        use_kernel=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bk),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_crossbar_apply_bf16_inputs():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(9))
+    x = jax.random.uniform(k1, (16, 256), minval=-1, maxval=1)
+    w = jax.random.normal(k2, (256, 64)) / 16.0
+    p = program_layer(w)
+    ref = crossbar_apply(p, x)
+    out = crossbar_apply(p, x.astype(jnp.bfloat16), use_kernel=True)
+    assert out.dtype == jnp.bfloat16
+    rel = float(jnp.linalg.norm(out.astype(jnp.float32) - ref) /
+                jnp.linalg.norm(ref))
+    assert rel < 0.02, rel
+
+
+def test_wire_resistance_folded_at_program_time():
+    """r_seg is a program-time transform: programmed state differs and
+    both evaluate paths agree on the attenuated result."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(10))
+    x = jax.random.uniform(k1, (8, 128), minval=-1, maxval=1)
+    w = jax.random.normal(k2, (128, 64)) / 12.0
+    p0 = program_layer(w)
+    p1 = program_layer(w, r_seg=2.5)
+    a0 = crossbar_apply(p0, x)
+    a1 = crossbar_apply(p1, x)
+    assert not np.allclose(np.asarray(a0), np.asarray(a1))
+    k1_out = crossbar_apply(p1, x, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(k1_out),
                                rtol=1e-4, atol=1e-5)
 
 
@@ -70,6 +118,21 @@ def test_digital_linear_kernel_path():
                                rtol=1e-5, atol=1e-6)
 
 
+def test_digital_apply_fused_epilogue_one_kernel_call():
+    """program_digital folds the requantize constants; digital_apply
+    with use_kernel runs requantize+bias+activation in the kernel."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(11), 3)
+    x = jax.random.uniform(k1, (24, 300), minval=-1, maxval=1)
+    w = jax.random.normal(k2, (300, 70)) * 0.1
+    b = jax.random.normal(k3, (70,)) * 0.05
+    dp = program_digital(w)
+    a = digital_apply(dp, x, bias=b, activation="sigmoid")
+    bk = digital_apply(dp, x, bias=b, activation="sigmoid",
+                       use_kernel=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bk),
+                               rtol=1e-5, atol=1e-6)
+
+
 def test_mlp_modes_agree_on_sign_structure():
     """QAT + crossbar + digital modes of the same MLP should agree with
     float mode on nearly all threshold decisions."""
@@ -83,3 +146,54 @@ def test_mlp_modes_agree_on_sign_structure():
         out = mlp_apply(params, x, spec, mode=mode)
         agree = float(jnp.mean((out > 0) == (ref > 0)))
         assert agree > 0.95, (mode, agree)
+
+
+def test_program_mlp_explicit_reuse_matches_cached():
+    spec = MLPSpec((48, 24, 6), activation="sigmoid",
+                   out_activation="linear")
+    params = mlp_init(jax.random.PRNGKey(12), spec)
+    x = jax.random.uniform(jax.random.PRNGKey(13), (10, 48),
+                           minval=-1, maxval=1)
+    prog = program_mlp(params, spec, mode="crossbar")
+    a = programmed_mlp_apply(prog, x)
+    b = mlp_apply(params, x, spec, mode="crossbar", programmed=prog)
+    c = mlp_apply(params, x, spec, mode="crossbar")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c))
+
+
+def test_mlp_apply_programs_exactly_once(monkeypatch):
+    """Regression: repeated crossbar-mode evaluations must not
+    re-encode — program_layer runs exactly once per layer."""
+    spec = MLPSpec((32, 16, 4), activation="tanh",
+                   out_activation="linear")
+    params = mlp_init(jax.random.PRNGKey(14), spec)
+    calls = {"n": 0}
+    real = cbl.program_layer
+
+    def counting_program_layer(*args, **kwargs):
+        calls["n"] += 1
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(cbl, "program_layer", counting_program_layer)
+    cbl.clear_program_cache()
+    for i in range(5):
+        x = jax.random.uniform(jax.random.PRNGKey(20 + i), (8, 32),
+                               minval=-1, maxval=1)
+        mlp_apply(params, x, spec, mode="crossbar")
+    assert calls["n"] == len(params), calls["n"]
+
+    # digital mode: program_digital likewise runs once per layer
+    dcalls = {"n": 0}
+    real_d = cbl.program_digital
+
+    def counting_program_digital(*args, **kwargs):
+        dcalls["n"] += 1
+        return real_d(*args, **kwargs)
+
+    monkeypatch.setattr(cbl, "program_digital", counting_program_digital)
+    for i in range(5):
+        x = jax.random.uniform(jax.random.PRNGKey(30 + i), (8, 32),
+                               minval=-1, maxval=1)
+        mlp_apply(params, x, spec, mode="digital")
+    assert dcalls["n"] == len(params), dcalls["n"]
