@@ -9,15 +9,13 @@ is reported — §IV.B/§V.C in one script.
 
 Run:  PYTHONPATH=src python examples/paper_apps_pipeline.py
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.chip import compile_app, compile_chip
 from repro.configs.paper_apps import APPS
-from repro.core.costmodel import specialized_cost
 from repro.data.images import sensor_stream
 from repro.optim.qat import train_mlp
-from repro.core.crossbar_layer import program_mlp, programmed_mlp_apply
 
 
 def sobel_reference(img):
@@ -51,16 +49,17 @@ def main():
     t = train_mlp(np.asarray(X), np.asarray(y), (9, 20, 2),
                   activation="sigmoid", weight_bits=8, act_bits=8,
                   steps=800, lr=0.5)
-    # deploy on crossbars: program the chip ONCE, then stream frames
-    # through the programmed state (no per-inference re-encoding)
-    chip = program_mlp(t["params"], t["spec"], mode="crossbar")
-    out = programmed_mlp_apply(chip, X)
+    # deploy on crossbars: compile the chip ONCE (map + route +
+    # program), then stream frames through the programmed state
+    chip = compile_chip(t["spec"], params=t["params"],
+                        system="memristor")
+    out = chip.stream(X)
     pred = jnp.argmax(out, -1)
     agree = float(jnp.mean(pred == y))
     print(f"  deployed-vs-Sobel edge agreement: {100 * agree:.1f}%")
     for fi, frame in enumerate(frames[1:3], start=1):
         Xf = windows3x3(frame) - 0.5
-        pf = jnp.argmax(programmed_mlp_apply(chip, Xf), -1)
+        pf = jnp.argmax(chip.stream(Xf), -1)
         reff = sobel_reference(frame).reshape(-1)
         yf = (reff > jnp.percentile(reff, 50)).astype(jnp.int32)
         af = float(jnp.mean(pf == yf))
@@ -75,15 +74,14 @@ def main():
     print(f"  reference motion fraction: {100 * motion_frac:.0f}% "
           f"(moving pattern — nonzero by construction)")
 
-    # -- real-time margins on the mapped fabric ------------------------ #
-    print("== mapped 1T1M systems at the paper's real-time loads ==")
+    # -- real-time margins on the compiled fabric ---------------------- #
+    print("== compiled 1T1M systems at the paper's real-time loads ==")
     for app_id in ("edge", "motion"):
-        c = specialized_cost(APPS[app_id], "memristor")
-        m = c.mapping
-        margin = m.items_per_second_capacity * m.replication / \
+        rep = compile_app(APPS[app_id], "memristor").report()
+        margin = rep.capacity_items_per_second * rep.replication / \
             APPS[app_id].items_per_second
-        print(f"  {app_id:>6s}: {c.cores:3d} cores, {c.power_mw:7.3f} mW, "
-              f"throughput margin {margin:.2f}x")
+        print(f"  {app_id:>6s}: {rep.cores:3d} cores, "
+              f"{rep.power_mw:7.3f} mW, throughput margin {margin:.2f}x")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,9 @@
 """Quickstart: the three layers of this framework in one script.
 
-  1. the paper's core — map an MLP onto memristor cores, check the cost
-  2. crossbar-mode execution — run the mapped network functionally
+  1. the paper's core — compile the deep app onto 1T1M/SRAM chips and
+     read each compiled chip's Tables II–VI accounting
+  2. compile → program → stream — run the mapped network functionally
+     through the unified chip API
   3. the LM substrate — train a reduced assigned-arch model end to end
 
 Run:  PYTHONPATH=src python examples/quickstart.py
@@ -9,37 +11,48 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import jax.numpy as jnp
 
+from repro.chip import compile_app, compile_chip
 from repro.configs.paper_apps import APPS
-from repro.core.costmodel import app_costs, efficiency_over_risc
-from repro.core.crossbar_layer import crossbar_apply, program_layer
-from repro.core.mapping import map_networks
+from repro.core.costmodel import risc_cost
+from repro.core.crossbar_layer import MLPSpec, mlp_init
 
 
 def part1_map_the_paper():
-    print("== 1. map the paper's MNIST deep network onto 1T1M cores ==")
+    print("== 1. compile the paper's MNIST deep network per system ==")
     app = APPS["deep"]
-    costs = app_costs(app)
-    eff = efficiency_over_risc(costs)
-    for name, c in costs.items():
-        print(f"  {name:>8s}: {c.cores:4d} cores, {c.area_mm2:8.3f} mm², "
-              f"{c.power_mw:10.3f} mW  ({eff[name]:.0f}x vs RISC)")
+    risc = risc_cost(app)
+    print(f"  {'risc':>8s}: {risc.cores:4d} cores, "
+          f"{risc.area_mm2:8.3f} mm², {risc.power_mw:10.3f} mW  (1x)")
+    for name in ("digital", "1t1m"):
+        rep = compile_app(app, name).report()   # split→pack→place→route
+        print(f"  {name:>8s}: {rep.cores:4d} cores, "
+              f"{rep.area_mm2:8.3f} mm², {rep.power_mw:10.3f} mW  "
+              f"({risc.power_mw / rep.power_mw:.0f}x vs RISC)")
 
 
 def part2_crossbar_execution():
-    print("\n== 2. program a layer once, stream batches through it ==")
-    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
-    w = jax.random.normal(k2, (784, 200)) * 0.05
-    chip = program_layer(w)          # 8-bit differential pairs, Eq. 3 —
-    #                                  programmed ONCE (the §III.D split)
+    print("\n== 2. compile once, stream batches through the chip ==")
+    spec = MLPSpec((784, 200), activation="linear",
+                   out_activation="linear")
+    params = mlp_init(jax.random.PRNGKey(0), spec)
+    # one call runs split→pack→place→route AND programs every mapped
+    # group's 8-bit differential-pair tiles (the §III.D split): the
+    # chip is programmed ONCE...
+    chip = compile_chip(spec, params=params, system="memristor")
+    k1 = jax.random.PRNGKey(1)
     for step in range(3):            # ...then evaluated many times
         k1, kb = jax.random.split(k1)
         x = jax.random.uniform(kb, (4, 784), minval=0, maxval=1)
-        y_xbar = crossbar_apply(chip, x)
-        y_ref = x @ w
-        rel = float(jnp.linalg.norm(y_xbar - y_ref) /
+        y_chip = chip.stream(x)      # the mapped Fig. 11 dataflow
+        y_ref = x @ params[0]["w"] + params[0]["b"]
+        rel = float(jnp.linalg.norm(y_chip - y_ref) /
                     jnp.linalg.norm(y_ref))
-        print(f"  stream batch {step}: crossbar vs float relative error "
+        print(f"  stream batch {step}: chip vs float relative error "
               f"{rel:.4f} (no re-programming)")
+    rep = chip.report()
+    print(f"  this compile: {rep.cores} cores on a {rep.grid[0]}x"
+          f"{rep.grid[1]} mesh, {rep.area_mm2:.3f} mm², "
+          f"{rep.power_mw:.3f} mW")
 
 
 def part3_train_an_assigned_arch():

@@ -1,25 +1,27 @@
 """Serving example: continuous batching over a reduced assigned arch,
-plus streaming classification through a program-once crossbar chip.
+plus slot-scheduled streaming through a compiled crossbar chip.
 
 Part 1 submits a burst of mixed-length LM requests, reports per-request
 latency, engine throughput and slot utilization. The decode step is the
 exact function the multi-pod dry-run lowers for the ``decode_*`` shapes.
 
-Part 2 is the paper's own serving story: an MLP classifier is
-programmed onto simulated 1T1M crossbars ONCE, then request batches
-stream through the programmed state — the per-request cost is a single
-fused evaluate, never a re-encode.
+Part 2 is the paper's own serving story through the SAME scheduler: an
+MLP classifier is compiled onto simulated 1T1M crossbars ONCE
+(``compile_chip``), then ``chip.serve()`` drives item streams through
+the programmed state — both engines implement the
+``repro.serving.StreamingEngine`` contract, so the driver loop is
+identical.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
+from repro.chip import ChipRequest, compile_chip
 from repro.configs import get_reduced
-from repro.core.crossbar_layer import (MLPSpec, mlp_init, program_mlp,
-                                       programmed_mlp_apply)
+from repro.core.crossbar_layer import MLPSpec, mlp_init
 from repro.models import model as model_lib
 from repro.serving.engine import Engine, Request
 
@@ -54,30 +56,39 @@ def main():
     serve_crossbar_stream()
 
 
-def serve_crossbar_stream(batches: int = 32, batch: int = 64):
-    """Program a classifier chip once, then serve a stream of request
-    batches against the programmed state (§III.D stream-many)."""
-    print("\n== program-once crossbar classifier serving ==")
+def serve_crossbar_stream(n_requests: int = 12, slots: int = 4):
+    """Compile a classifier chip once, then let the slot scheduler
+    serve a burst of item streams against the programmed state
+    (§III.D stream-many — the chip side of the StreamingEngine
+    contract)."""
+    print("\n== compiled-chip classifier serving (chip.serve) ==")
     spec = MLPSpec((64, 48, 10), activation="threshold",
                    out_activation="linear")
     params = mlp_init(jax.random.PRNGKey(0), spec)
 
     t0 = time.perf_counter()
-    chip = program_mlp(params, spec, mode="crossbar")
+    chip = compile_chip(spec, params=params, system="memristor")
     t_prog = time.perf_counter() - t0
 
-    key = jax.random.PRNGKey(1)
+    eng = chip.serve(slots=slots)
+    rng = np.random.default_rng(1)
+    reqs = [ChipRequest(uid=i, items=rng.uniform(-1, 1, (8 + 5 * (i % 4),
+                                                         64)))
+            for i in range(n_requests)]
+    for r in reqs:
+        eng.submit(r)
     t0 = time.perf_counter()
-    served = 0
-    for _ in range(batches):
-        key, kb = jax.random.split(key)
-        x = jax.random.uniform(kb, (batch, 64), minval=-1, maxval=1)
-        logits = programmed_mlp_apply(chip, x)
-        served += int(jnp.argmax(logits, -1).shape[0])
+    steps = 0
+    while eng.queue or eng.active:
+        eng.step()                 # ONE chip.stream batch per step
+        steps += 1
     t_serve = time.perf_counter() - t0
-    print(f"  programmed once in {t_prog * 1e3:.1f} ms; served {served} "
-          f"items in {t_serve * 1e3:.1f} ms "
-          f"({served / t_serve:.0f} items/s, zero re-programming)")
+    served = sum(st.result.shape[0] for st in eng.finished)
+    print(f"  compiled once in {t_prog * 1e3:.1f} ms "
+          f"({chip.total_cores} cores); {len(reqs)} requests / {served} "
+          f"items in {steps} engine steps, {t_serve * 1e3:.1f} ms "
+          f"({served / t_serve:.0f} items/s; slot efficiency "
+          f"{served / max(steps * slots, 1):.0%}; zero re-programming)")
 
 
 if __name__ == "__main__":

@@ -13,10 +13,10 @@ import argparse
 import jax
 import jax.numpy as jnp
 
+from repro.chip import compile_chip
 from repro.configs.paper_apps import APPS
-from repro.core.costmodel import app_costs
-from repro.core.crossbar_layer import MLPSpec, program_mlp, \
-    programmed_mlp_apply
+from repro.core.costmodel import risc_cost
+from repro.core.crossbar_layer import MLPSpec
 from repro.data.images import mnist_like
 from repro.optim.qat import accuracy, train_mlp
 
@@ -24,11 +24,14 @@ DIMS = (784, 200, 100, 10)
 
 
 def deploy_crossbar(params, key):
-    """Program the trained MLP onto crossbars ONCE (with the
-    feedback-write residual noise model) — the deployed chip. The
-    returned ProgrammedMLP is what streams inference forever after."""
+    """Compile the trained MLP onto the chip ONCE — split→pack→place→
+    route plus tile programming (with the feedback-write residual noise
+    model). The returned CompiledChip streams inference forever after
+    and carries its own cost accounting."""
     spec = MLPSpec(DIMS, activation="threshold", out_activation="linear")
-    return program_mlp(params, spec, mode="crossbar", noise_key=key)
+    return compile_chip(spec, params=params, system="memristor",
+                        items_per_second=APPS["deep"].items_per_second,
+                        noise_key=key)
 
 
 def main():
@@ -44,13 +47,13 @@ def main():
     acc_float = accuracy(t["params"], t["spec"], xte, yte, mode="qat")
     print(f"  trained accuracy (QAT forward): {100 * acc_float:.1f}%")
 
-    print("== programming + deployed inference (crossbar mode) ==")
+    print("== compile + deployed inference (the unified chip API) ==")
     chip = deploy_crossbar(t["params"], jax.random.PRNGKey(7))
-    # stream the test set through the programmed chip in batches —
+    # stream the test set through the compiled chip in batches —
     # program-once / evaluate-many, the paper's deployment model
     preds = []
     for lo in range(0, xte.shape[0], 128):
-        logits = programmed_mlp_apply(chip, jnp.asarray(xte[lo:lo + 128]))
+        logits = chip.stream(jnp.asarray(xte[lo:lo + 128]))
         preds.append(jnp.argmax(logits, -1))
     acc_chip = float(jnp.mean(jnp.concatenate(preds) == yte))
     print(f"  deployed accuracy (programmed 1T1M): {100 * acc_chip:.1f}%")
@@ -59,12 +62,12 @@ def main():
           f"(paper Fig. 12: threshold ≤ ~3%)")
 
     print("== system cost at the paper's real-time load (100k items/s) ==")
-    costs = app_costs(APPS["deep"])
-    c = costs["1t1m"]
-    print(f"  {c.cores} cores, {c.area_mm2:.3f} mm², {c.power_mw:.3f} mW "
-          f"→ {c.energy_per_item_nj:.2f} nJ/classification")
-    print(f"  ({costs['risc'].power_mw / c.power_mw:.0f}x more "
-          f"power-efficient than the RISC system)")
+    rep = chip.report()          # the same compile that streams above
+    print(f"  {rep.cores} cores ({rep.replication}x replica), "
+          f"{rep.area_mm2:.3f} mm², {rep.power_mw:.3f} mW "
+          f"→ {rep.energy_per_item_nj:.2f} nJ/classification")
+    print(f"  ({risc_cost(APPS['deep']).power_mw / rep.power_mw:.0f}x "
+          f"more power-efficient than the RISC system)")
 
 
 if __name__ == "__main__":

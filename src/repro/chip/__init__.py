@@ -1,0 +1,19 @@
+"""The unified chip API: compile → program → stream as one object.
+
+  chip = compile_chip(spec, params=..., system="memristor",
+                      items_per_second=...)
+  y = chip.stream(x)          # the mapped dataflow, programmed once
+  r = chip.report()           # Tables II–VI accounting in one record
+  eng = chip.serve(slots=4)   # slot-scheduled streaming engine
+
+See :mod:`repro.chip.compile` for the full design notes.
+Self-check:  PYTHONPATH=src python -m repro.chip --selftest
+"""
+from repro.chip.compile import (CompiledChip, StreamLayer, compile_app,
+                                compile_chip)
+from repro.chip.report import ChipReport, chip_report
+from repro.chip.serving import ChipEngine, ChipRequest, ChipRequestState
+
+__all__ = ["CompiledChip", "StreamLayer", "compile_app", "compile_chip",
+           "ChipReport", "chip_report",
+           "ChipEngine", "ChipRequest", "ChipRequestState"]

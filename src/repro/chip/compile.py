@@ -1,0 +1,432 @@
+"""compile_chip: the unified compile → program → stream entry point.
+
+The paper's pitch is a *system*: network topologies are compiled onto
+fixed-geometry cores (§IV.C), the resulting flows are statically routed
+over the 2-D mesh (§II.B), every mapped core is programmed once
+(§III.D), and the programmed chip then streams items at a fixed rate.
+``compile_chip`` runs that whole pipeline and returns a
+:class:`CompiledChip` with three verbs:
+
+  chip.stream(x)   — execute the *mapped* dataflow functionally:
+                     stage-ordered group evaluation, per-row-chunk
+                     sub-neuron partials, programmed combiner neurons
+                     (Fig. 11), replica fan-out — through the fused
+                     kernels / batched tile-grid einsum.
+  chip.report()    — the unified area/power/throughput accounting the
+                     Tables II–VI benchmarks previously assembled by
+                     hand from mapping + routing + costmodel.
+  chip.serve(...)  — a slot-scheduled streaming engine over the chip
+                     (the same scheduler that drives transformer
+                     decode in ``repro.serving``).
+
+A CompiledChip is a jit-able pytree: the programmed conductance tiles,
+fold scales and biases are array leaves; geometry, placement, stage
+schedule and the mapping/routing reports are static aux data. Passing a
+chip through ``jax.jit`` (or calling ``chip.stream`` repeatedly) never
+re-programs tile state — the §III.D program-once economics are
+structural, not a calling convention.
+
+Functional tile layout vs the packer's row balancing: both split a
+layer with ``fan_in > geom.rows`` into ``ceil(fan_in / geom.rows)``
+row chunks (the Fig. 11 sub-neuron level). The packer balances rows
+across chunks so link streaming time equalizes (7 chunks of 112 for
+784 inputs); the functional image uses uniform ``geom.rows`` chunks so
+the programmed tiles are bit-identical to ``program_layer``'s — the
+same chunk *count* into the same cores, so placement, routing and the
+cost model are unchanged, and ``chip.stream`` matches the programmed
+dense oracle exactly instead of re-quantizing on different tile
+boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import routing as routing_lib
+from repro.core.crossbar_layer import (CrossbarParams, DigitalParams,
+                                       MLPSpec, ProgrammedMLP,
+                                       digital_apply, program_layer,
+                                       program_mlp)
+from repro.core.device import DEFAULT_DEVICE, DeviceModel
+from repro.core.mapping import (Mapping, Net, map_networks)
+from repro.core.neural_core import CoreGeometry
+from repro.core import quantization as q
+
+
+def _static():
+    return dataclasses.field(metadata=dict(static=True))
+
+
+# --------------------------------------------------------------------- #
+# the streamable execution plan (a jit-able pytree)
+# --------------------------------------------------------------------- #
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StreamLayer:
+    """One network layer of the mapped dataflow.
+
+    ``tiles`` is the programmed chip state (CrossbarParams tile grid or
+    DigitalParams SRAM image). ``combine`` holds one programmed
+    all-ones weight vector per Fig. 11 combiner level — the combining
+    neurons are *real programmed neurons* (encoded through the same
+    differential-pair + fold pipeline as any weight), not a free
+    einsum reduction. ``levels`` gives each combine level's static
+    (groups, fan_in) shape; empty when the layer fits the core rows.
+    """
+    tiles: Any                     # CrossbarParams | DigitalParams
+    combine: Tuple[jax.Array, ...]           # (fan_in,) f32 per level
+    bias: jax.Array                          # (d_out,) f32
+    activation: str = _static()
+    levels: Tuple[Tuple[int, int], ...] = _static()
+
+
+def _combiner_levels(n_chunks: int, geom: CoreGeometry,
+                     device: DeviceModel) -> Tuple[Tuple[jax.Array, ...],
+                                                   Tuple[Tuple[int, int],
+                                                         ...]]:
+    """Fig. 11 combiner tree for ``n_chunks`` sub-neuron partials.
+
+    Mirrors ``split_network``'s recursion: while the partial count
+    exceeds the core rows, an intermediate sub-neuron level sums
+    balanced groups; the final level is the combining neuron proper.
+    Every level's all-ones weight column is programmed through
+    ``program_layer`` so the combine path evaluates *programmed*
+    conductance state, exactly like any other neuron.
+    """
+    vecs: List[jax.Array] = []
+    levels: List[Tuple[int, int]] = []
+    k = n_chunks
+    while k > 1:
+        if k > geom.rows:
+            groups = math.ceil(k / geom.rows)
+            fan_in = math.ceil(k / groups)
+        else:
+            groups, fan_in = 1, k
+        ones = program_layer(jnp.ones((fan_in, 1), jnp.float32),
+                             geom=geom, device=device)
+        w = ((ones.gp - ones.gn) *
+             ones.scale[:, :, None, :])[0, 0, :fan_in, 0]
+        vecs.append(w.astype(jnp.float32))
+        levels.append((groups, fan_in))
+        k = groups
+    return tuple(vecs), tuple(levels)
+
+
+def _layer_plan(lp, bias: jax.Array, activation: str,
+                device: DeviceModel) -> StreamLayer:
+    if isinstance(lp, CrossbarParams):
+        R = lp.gp.shape[0]
+        geom = CoreGeometry(lp.geom_rows, lp.geom_cols)
+        combine, levels = _combiner_levels(R, geom, device) if R > 1 \
+            else ((), ())
+        return StreamLayer(lp, combine, bias.astype(jnp.float32),
+                           activation, levels)
+    return StreamLayer(lp, (), bias.astype(jnp.float32), activation, ())
+
+
+def _crossbar_partials(p: CrossbarParams, x: jax.Array,
+                       use_kernel: bool) -> jax.Array:
+    """Sub-neuron stage: per-row-chunk partial dot products.
+
+    x (B, d_in) → (B, R, d_out). Identical tile arithmetic to
+    ``crossbar_apply`` but the Fig. 11 reduction over row chunks is NOT
+    folded into the contraction — the partials feed the programmed
+    combiner stage, which is the mapped dataflow.
+    """
+    R, C = p.gp.shape[0], p.gp.shape[1]
+    rows, cols = p.geom_rows, p.geom_cols
+    cdtype = jnp.bfloat16 if x.dtype == jnp.bfloat16 else jnp.float32
+    xf = x.astype(cdtype)
+    xp = jnp.pad(xf, ((0, 0), (0, R * rows - p.d_in)))
+    xt = xp.reshape(-1, R, rows)
+    if use_kernel:
+        # the fused kernel computes one row-chunk's (B, C·cols) slab;
+        # vmap over the chunk axis keeps the partials separate for the
+        # combiner stage while still running the Pallas hot path
+        from repro.kernels import ops as kops
+        parts = jax.vmap(
+            lambda xr, gp, gn, sc: kops.crossbar_mvm(
+                xr[:, None, :], gp[None], gn[None], sc[None]),
+            in_axes=(1, 0, 0, 0), out_axes=1)(
+                xt, p.gp, p.gn, p.scale)
+    else:
+        w_eff = ((p.gp - p.gn) * p.scale[:, :, None, :]).astype(cdtype)
+        parts = jnp.einsum("brk,rckn->brcn", xt, w_eff,
+                           preferred_element_type=jnp.float32)
+        parts = parts.reshape(xt.shape[0], R, C * cols)
+    return parts[:, :, :p.d_out]
+
+
+def _apply_stream_layer(layer: StreamLayer, x: jax.Array,
+                        use_kernel: bool) -> jax.Array:
+    if isinstance(layer.tiles, DigitalParams):
+        return digital_apply(layer.tiles, x, bias=layer.bias,
+                             activation=layer.activation,
+                             use_kernel=use_kernel)
+    parts = _crossbar_partials(layer.tiles, x, use_kernel)  # (B, R, d)
+    for w, (groups, fan_in) in zip(layer.combine, layer.levels):
+        B, K, d = parts.shape
+        pad = groups * fan_in - K
+        if pad:
+            parts = jnp.pad(parts, ((0, 0), (0, pad), (0, 0)))
+        parts = jnp.einsum("bgkd,k->bgd",
+                           parts.reshape(B, groups, fan_in, d),
+                           w.astype(parts.dtype),
+                           preferred_element_type=jnp.float32)
+    out = parts[:, 0, :] if parts.ndim == 3 else parts
+    out = out + layer.bias[None, :]
+    return q.make_activation(layer.activation)(out)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("use_kernel", "replication"))
+def _stream(plan: Tuple[StreamLayer, ...], x: jax.Array,
+            use_kernel: bool = False, replication: int = 1) -> jax.Array:
+    """Stage-ordered evaluation of the whole mapped pipeline, with
+    replica fan-out: the batch is dealt across the ``replication``
+    identical pipeline copies (§V.C), each streaming its shard through
+    the same programmed image."""
+    def replica(xb):
+        h = xb
+        for layer in plan:
+            h = _apply_stream_layer(layer, h, use_kernel)
+        return h
+
+    B = x.shape[0]
+    if replication <= 1 or B < replication:
+        return replica(x)
+    per = math.ceil(B / replication)
+    pad = replication * per - B
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    out = jax.vmap(replica)(xp.reshape(replication, per, -1))
+    return out.reshape(replication * per, -1)[:B]
+
+
+# --------------------------------------------------------------------- #
+# the compiled chip object
+# --------------------------------------------------------------------- #
+class _ChipStatic:
+    """Identity-hashed wrapper so rich compile metadata (Mapping,
+    RouteReport — mutable report dataclasses) can ride through jit as
+    static aux data: two chips are the same trace key iff they are the
+    same compile."""
+    __slots__ = ("value",)
+
+    def __init__(self, value):
+        self.value = value
+
+    def __hash__(self):
+        return id(self.value)
+
+    def __eq__(self, other):
+        return isinstance(other, _ChipStatic) and other.value is self.value
+
+
+@dataclasses.dataclass
+class CompiledChip:
+    """A fully compiled + programmed chip (see module docstring).
+
+    Registered as a pytree: ``plan`` (conductance tiles, fold scales,
+    biases) are the array leaves; everything else — geometry,
+    placement, the TDM schedule, the mapping — is static. jit-ing a
+    function over a chip re-traces per compile, never per call.
+    """
+    system: str                         # memristor | digital
+    geom: CoreGeometry
+    mapping: Mapping
+    route: routing_lib.RouteReport
+    items_per_second: float             # target rate (0 → best effort)
+    tsv_bits_per_item: Optional[float]
+    plan: Optional[Tuple[StreamLayer, ...]]   # None → analytic-only
+    dims: Optional[Tuple[int, ...]] = None
+
+    # ------------------------------------------------------------ #
+    @property
+    def replication(self) -> int:
+        return self.mapping.replication
+
+    @property
+    def total_cores(self) -> int:
+        return self.mapping.total_cores
+
+    def stream(self, x: jax.Array, *, use_kernel: bool = False,
+               fan_out: bool = True) -> jax.Array:
+        """Stream a batch through the mapped, programmed pipeline.
+
+        x: (..., d_in) → (..., d_out). ``fan_out=False`` pins the whole
+        batch onto one replica (the other replicas idle), e.g. to
+        measure single-replica latency.
+        """
+        if self.plan is None:
+            raise ValueError(
+                "this chip was compiled from bare network shapes "
+                "(no weights), so it is analytic-only: report() works, "
+                "but stream() and serve() need programmed state. "
+                "Re-compile with compile_chip(spec, params=...) or "
+                "from a ProgrammedMLP.")
+        lead = x.shape[:-1]
+        xf = x.reshape(-1, x.shape[-1])
+        rep = self.mapping.replication if fan_out else 1
+        out = _stream(self.plan, xf, use_kernel=use_kernel,
+                      replication=rep)
+        return out.reshape(*lead, out.shape[-1]).astype(x.dtype)
+
+    def __call__(self, x: jax.Array, **kw) -> jax.Array:
+        return self.stream(x, **kw)
+
+    def report(self):
+        """Unified area/power/throughput accounting (Tables II–VI)."""
+        from repro.chip.report import chip_report
+        return chip_report(self)
+
+    def serve(self, *, slots: int = 4, **kw):
+        """A :class:`repro.serving.StreamingEngine` over this chip."""
+        from repro.chip.serving import ChipEngine
+        return ChipEngine(self, slots=slots, **kw)
+
+
+def _chip_flatten(chip: CompiledChip):
+    # cache the wrapper on the instance: _ChipStatic compares by
+    # identity, so a fresh wrapper per flatten would make every jit
+    # call over the chip a new trace key (retrace per call, not per
+    # compile). One wrapper per chip keeps the trace cache warm.
+    static = chip.__dict__.get("_static")
+    if static is None:
+        static = _ChipStatic((chip.system, chip.geom, chip.mapping,
+                              chip.route, chip.items_per_second,
+                              chip.tsv_bits_per_item, chip.dims))
+        chip.__dict__["_static"] = static
+    return (chip.plan,), static
+
+
+def _chip_unflatten(static: _ChipStatic, children) -> CompiledChip:
+    (system, geom, mapping, route, rate, tsv, dims) = static.value
+    chip = CompiledChip(system, geom, mapping, route, rate, tsv,
+                        children[0], dims)
+    chip.__dict__["_static"] = static
+    return chip
+
+
+jax.tree_util.register_pytree_node(CompiledChip, _chip_flatten,
+                                   _chip_unflatten)
+
+
+# --------------------------------------------------------------------- #
+# compile_chip
+# --------------------------------------------------------------------- #
+NetworksLike = Union[MLPSpec, ProgrammedMLP, Net, Sequence[Net]]
+
+
+def _spec_dims(prog: ProgrammedMLP) -> Tuple[int, ...]:
+    dims = [prog.layers[0].d_in]
+    for lp in prog.layers:
+        dims.append(lp.d_out)
+    return tuple(dims)
+
+
+def compile_chip(networks: NetworksLike, *,
+                 params=None,
+                 system: str = "memristor",
+                 geom: Optional[CoreGeometry] = None,
+                 items_per_second: float = 0.0,
+                 weight_bits: int = 8,
+                 device: DeviceModel = DEFAULT_DEVICE,
+                 noise_key: Optional[jax.Array] = None,
+                 r_seg: float = 0.0,
+                 sensor_flags: Optional[Sequence[bool]] = None,
+                 deps: Optional[Sequence[Sequence[int]]] = None,
+                 tsv_bits_per_item: Optional[float] = None
+                 ) -> CompiledChip:
+    """Compile networks onto a chip: split → pack → place → route, then
+    program every mapped group's tile state.
+
+    ``networks`` is one of
+      * an :class:`MLPSpec` — pass ``params`` (from ``mlp_init`` or the
+        QAT trainer) to get a streamable chip, omit it for an
+        analytic-only compile;
+      * a :class:`ProgrammedMLP` — re-uses its already-programmed tile
+        state (no re-encoding), geometry/system inferred;
+      * a ``(instances, dims)`` net tuple or a sequence of them — the
+        paper's app notation; analytic-only (report/serve sizing, no
+        functional stream).
+
+    ``system`` is ``"memristor"`` (1T1M crossbar cores) or
+    ``"digital"`` (SRAM cores); ``items_per_second`` sizes the replica
+    fan-out to the application's real-time rate (§V.C).
+    """
+    if system == "1t1m":
+        system = "memristor"
+    if system not in ("memristor", "digital"):
+        raise ValueError(f"compile_chip: unknown system {system!r}")
+    mode = "crossbar" if system == "memristor" else "digital"
+
+    prog: Optional[ProgrammedMLP] = None
+    dims: Optional[Tuple[int, ...]] = None
+    if isinstance(networks, ProgrammedMLP):
+        prog = networks
+        if (prog.mode == "crossbar") != (system == "memristor"):
+            raise ValueError(
+                f"compile_chip: ProgrammedMLP mode {prog.mode!r} does "
+                f"not match system {system!r}")
+        dims = _spec_dims(prog)
+        if geom is None and prog.mode == "crossbar":
+            lp0 = prog.layers[0]
+            geom = CoreGeometry(lp0.geom_rows, lp0.geom_cols)
+        nets: Tuple[Net, ...] = ((1, dims),)
+    elif isinstance(networks, MLPSpec):
+        dims = tuple(networks.dims)
+        nets = ((1, dims),)
+        if params is not None:
+            prog = program_mlp(params, networks, mode=mode,
+                               geom=geom or _default_geom(system),
+                               device=device, weight_bits=weight_bits,
+                               noise_key=noise_key, r_seg=r_seg)
+    else:
+        if params is not None:
+            raise ValueError(
+                "compile_chip: params are only meaningful with an "
+                "MLPSpec (one weighted network); bare net tuples "
+                "compile analytic-only chips")
+        seq = list(networks)
+        if seq and isinstance(seq[0], int):       # a single bare Net
+            seq = [tuple(networks)]
+        nets = tuple((int(i), tuple(d)) for i, d in seq)
+
+    mapping = map_networks(nets, system=system, geom=geom,
+                           items_per_second=items_per_second,
+                           sensor_flags=sensor_flags, deps=deps)
+    route = routing_lib.route(mapping)
+
+    plan: Optional[Tuple[StreamLayer, ...]] = None
+    if prog is not None:
+        plan = tuple(_layer_plan(lp, b, act, device)
+                     for lp, b, act in zip(prog.layers, prog.biases,
+                                           prog.activations))
+    return CompiledChip(system, mapping.geom, mapping, route,
+                        items_per_second, tsv_bits_per_item, plan, dims)
+
+
+def _default_geom(system: str) -> CoreGeometry:
+    from repro.core.neural_core import DIGITAL_GEOM, MEMRISTOR_GEOM
+    return MEMRISTOR_GEOM if system == "memristor" else DIGITAL_GEOM
+
+
+def compile_app(app, system: str, *,
+                geom: Optional[CoreGeometry] = None) -> CompiledChip:
+    """Compile one of the paper's applications (an
+    ``repro.configs.paper_apps.AppConfig``, duck-typed) at its real-time
+    load: the analytic chip whose ``report()`` is the app's Tables
+    II–VI row for ``system``."""
+    if system == "1t1m":
+        system = "memristor"
+    nets = app.memristor_nets if system == "memristor" else app.sram_nets
+    return compile_chip(nets, system=system, geom=geom,
+                        items_per_second=app.items_per_second,
+                        sensor_flags=app.sensor_flags(system),
+                        deps=app.net_deps(system),
+                        tsv_bits_per_item=app.tsv_bits_per_item)

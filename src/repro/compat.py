@@ -16,6 +16,16 @@ except AttributeError:  # 0.4.x line
     from jax.experimental.shard_map import shard_map  # noqa: F401
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns one dict on current jax but
+    a one-element list of dicts on the 0.4.x line; normalize to a dict
+    (empty when the backend reports nothing)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def make_auto_mesh(shape, axis_names):
     """jax.make_mesh with Auto axis types where supported (newer jax
     defaults to Explicit sharding otherwise); plain make_mesh on the

@@ -68,15 +68,20 @@ def risc_cost(app: AppConfig) -> SystemCost:
                       0.0, 0.0, app.items_per_second)
 
 
-def specialized_cost(app: AppConfig, system: str,
-                     geom: Optional[CoreGeometry] = None) -> SystemCost:
-    nets = app.memristor_nets if system == "memristor" else app.sram_nets
-    mapping = map_networks(nets, system=system, geom=geom,
-                           items_per_second=app.items_per_second,
-                           sensor_flags=app.sensor_flags(system),
-                           deps=app.net_deps(system))
-    route = routing_lib.route(mapping)
-    rate = app.items_per_second
+def fabric_cost(mapping: Mapping, route: routing_lib.RouteReport, *,
+                items_per_second: float,
+                tsv_bits_per_item: Optional[float] = None,
+                geom: Optional[CoreGeometry] = None) -> SystemCost:
+    """Assemble the unified area/power/throughput numbers for an
+    already-mapped, already-routed fabric (the shared backend of
+    ``specialized_cost`` and ``repro.chip.CompiledChip.report``).
+
+    ``tsv_bits_per_item`` overrides the mapping-derived sensor traffic
+    (sliding-window apps reuse pixels, so unique TSV bits < mapped
+    bits); ``None`` uses the router's per-item TSV count.
+    """
+    system = mapping.system
+    rate = items_per_second
     rate_per_replica = rate / mapping.replication
 
     if system == "memristor":
@@ -108,11 +113,26 @@ def specialized_cost(app: AppConfig, system: str,
     # routing + TSV energy: per-item energy × total item rate (replica
     # flows each carry their share of the rate)
     routing_mw = route.mesh_energy_pj * 1e-12 * rate * 1e3
-    tsv_bits = app.tsv_bits_per_item  # unique sensor bits (see AppConfig)
+    tsv_bits = route.tsv_bits if tsv_bits_per_item is None \
+        else tsv_bits_per_item
     tsv_mw = tsv_bits * routing_lib.TSV_PJ_PER_BIT * 1e-12 * rate * 1e3
     power = leak + dyn + routing_mw + tsv_mw
     return SystemCost(system, mapping.total_cores, area, power, leak, dyn,
                       routing_mw, tsv_mw, rate, mapping, route)
+
+
+def specialized_cost(app: AppConfig, system: str,
+                     geom: Optional[CoreGeometry] = None) -> SystemCost:
+    nets = app.memristor_nets if system == "memristor" else app.sram_nets
+    mapping = map_networks(nets, system=system, geom=geom,
+                           items_per_second=app.items_per_second,
+                           sensor_flags=app.sensor_flags(system),
+                           deps=app.net_deps(system))
+    route = routing_lib.route(mapping)
+    # unique sensor bits per item (see AppConfig.tsv_bits_per_item)
+    return fabric_cost(mapping, route,
+                       items_per_second=app.items_per_second,
+                       tsv_bits_per_item=app.tsv_bits_per_item, geom=geom)
 
 
 def app_costs(app: AppConfig) -> Dict[str, SystemCost]:

@@ -51,6 +51,7 @@ import collections
 import dataclasses
 import functools
 import math
+import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -65,6 +66,12 @@ from repro.core.neural_core import CoreGeometry, MEMRISTOR_GEOM
 
 def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
     return jnp.pad(x, ((0, rows - x.shape[0]), (0, cols - x.shape[1])))
+
+
+def _deprecated(name: str, instead: str) -> None:
+    warnings.warn(
+        f"{name} is deprecated; use {instead} (the unified chip API: "
+        "compile once, stream many)", DeprecationWarning, stacklevel=3)
 
 
 def _static():
@@ -192,11 +199,13 @@ def crossbar_linear(x: jax.Array, w: jax.Array, *,
                     activation: str = "linear",
                     noise_key: Optional[jax.Array] = None,
                     use_kernel: bool = False) -> jax.Array:
-    """One-shot program + apply. TEST-ONLY convenience: re-programs the
-    crossbars on every call, which silently throws away the paper's
-    program-once economics. Production / repeated evaluation must call
-    program_layer once and reuse the CrossbarParams (or use
-    program_mlp / mlp_apply's programmed path)."""
+    """DEPRECATED one-shot program + apply: re-programs the crossbars
+    on every call, which silently throws away the paper's program-once
+    economics. Hold a CrossbarParams from program_layer, or compile the
+    whole network with repro.chip.compile_chip."""
+    _deprecated("crossbar_linear",
+                "program_layer(...) + crossbar_apply, or "
+                "repro.chip.compile_chip(...).stream")
     params = program_layer(w, geom=geom, device=device, quantize=quantize,
                            noise_key=noise_key, r_seg=r_seg)
     return crossbar_apply(params, x, activation=activation,
@@ -271,9 +280,12 @@ def digital_apply(params: DigitalParams, x: jax.Array, *,
 def digital_linear(x: jax.Array, w: jax.Array, *, bits: int = 8,
                    activation: str = "linear",
                    use_kernel: bool = False) -> jax.Array:
-    """One-shot SRAM-core execution (§II.A datapath). TEST-ONLY
-    convenience — re-quantizes the weights on every call; repeated
-    evaluation must hold a DigitalParams from program_digital."""
+    """DEPRECATED one-shot SRAM-core execution (§II.A datapath):
+    re-quantizes the weights on every call. Hold a DigitalParams from
+    program_digital, or compile with repro.chip.compile_chip."""
+    _deprecated("digital_linear",
+                "program_digital(...) + digital_apply, or "
+                "repro.chip.compile_chip(..., system='digital').stream")
     params = program_digital(w, bits=bits)
     return digital_apply(params, x, activation=activation,
                          use_kernel=use_kernel)
@@ -402,12 +414,18 @@ def mlp_apply(params, x: jax.Array, spec: MLPSpec, *,
               use_kernel: bool = False) -> jax.Array:
     """mode: float | qat | crossbar | digital — the Fig. 12 sweep axes.
 
-    crossbar/digital evaluate against programmed chip state: pass
-    ``programmed`` (from program_mlp) explicitly, or let the built-in
-    memo program this param set on first use — repeated calls never
-    re-encode the weights either way."""
+    float/qat are the ex-situ TRAINING forward (the QAT trainer's path).
+    The deployed modes are DEPRECATED here: crossbar/digital execution
+    belongs to the chip API — ``repro.chip.compile_chip(spec,
+    params=...).stream(x)`` — which also maps/routes the network. This
+    shim keeps old call sites working: pass ``programmed`` (from
+    program_mlp) explicitly, or let the built-in memo program this
+    param set on first use — repeated calls never re-encode either way."""
     if mode in ("crossbar", "digital"):
         if programmed is None:
+            _deprecated(f"mlp_apply(mode={mode!r})",
+                        "repro.chip.compile_chip(spec, params=...)"
+                        ".stream(x)")
             programmed = _cached_program_mlp(params, spec, mode,
                                              weight_bits)
         return programmed_mlp_apply(programmed, x, use_kernel=use_kernel)

@@ -27,6 +27,7 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs import (ARCH_IDS, SHAPES_BY_NAME, applicable, get_config,
                            get_reduced)
 from repro.launch import mesh as mesh_lib
@@ -112,7 +113,7 @@ def lower_cell(cfg, shape_cfg, mesh, *, verbose: bool = True,
         t_compile = time.time() - t0
 
     ma = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = compat.cost_analysis_dict(compiled)
     hlo = compiled.as_text()
     coll = roofline.parse_collectives(hlo, n_dev)
     flops_dev = float(cost.get("flops", 0.0))

@@ -72,14 +72,20 @@ def train_mlp(x, y, dims, *, activation: str, weight_bits: int,
 
 
 def accuracy(params, spec, x, y, *, mode: str, weight_bits: int = 8,
-             act_bits: int = 8, programmed=None) -> float:
-    """Classification accuracy in any Fig. 12 mode. For the deployed
-    modes ("crossbar"/"digital") pass ``programmed`` (a ProgrammedMLP
-    from program_mlp) to evaluate against already-programmed chip
-    state; otherwise mlp_apply's program-once memo ensures repeated
-    accuracy() calls never re-encode the weights."""
-    from repro.core.crossbar_layer import mlp_apply
-    logits = mlp_apply(params, x, spec, weight_bits=weight_bits,
-                       act_bits=act_bits, mode=mode,
-                       programmed=programmed)
-    return float(jnp.mean(jnp.argmax(logits, -1) == y))
+             act_bits: int = 8, programmed=None, chip=None) -> float:
+    """Classification accuracy in any Fig. 12 mode.
+
+    For the deployed modes ("crossbar"/"digital") pass ``chip`` (a
+    ``repro.chip.CompiledChip`` from compile_chip — the unified API) or
+    ``programmed`` (a bare ProgrammedMLP) to evaluate already-programmed
+    state; with neither, the network is programmed once via the memo so
+    repeated accuracy() calls never re-encode the weights."""
+    x = jnp.asarray(x)
+    if chip is not None:
+        logits = chip.stream(x)
+    else:
+        from repro.core.crossbar_layer import mlp_apply
+        logits = mlp_apply(params, x, spec, weight_bits=weight_bits,
+                           act_bits=act_bits, mode=mode,
+                           programmed=programmed)
+    return float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(y)))

@@ -1,1 +1,2 @@
-from repro.serving.engine import Engine, Request, RequestState
+from repro.serving.engine import (Engine, Request, RequestState,
+                                  SlotScheduler, StreamingEngine)

@@ -1,14 +1,21 @@
-"""Continuous-batching serving engine (the inference-side driver).
+"""Continuous-batching serving (the inference-side driver).
 
-vLLM-style slot scheduler on top of the model's prefill/decode steps:
+Two layers:
 
-  * a fixed pool of B decode slots shares one batched KV cache;
-  * arriving requests are prefilled (B=1) and their prefix written into
-    a free lane (`kvcache.write_slot`), without stalling other lanes;
-  * every engine step runs ONE batched decode for all active lanes,
-    each at its own position (``cfg.decode_per_slot``);
-  * finished lanes (EOS or max_tokens) retire immediately and free
-    their slot — no lockstep barriers between requests.
+  * :class:`StreamingEngine` / :class:`SlotScheduler` — the generic
+    slot-scheduled streaming contract: a fixed pool of lanes, arriving
+    requests admitted into free lanes without stalling others, ONE
+    batched step for all active lanes per engine step, lanes retiring
+    the moment their request completes. The scheduler is payload-
+    agnostic: it drives the transformer decode step below and the
+    sensor-app chip stream (``repro.chip.serving.ChipEngine``) alike.
+
+  * :class:`Engine` — the transformer instantiation: a vLLM-style
+    continuous-batching decoder where every lane owns one slot of a
+    shared batched KV cache. Arriving requests are prefilled (B=1) and
+    their prefix written into a free lane (``kvcache.write_slot``);
+    every step runs ONE batched decode for all active lanes, each at
+    its own position (``cfg.decode_per_slot``).
 
 The decode step is the exact jitted function the dry-run lowers for the
 ``decode_*`` shapes, so serving-path behavior at scale is what was
@@ -19,7 +26,8 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Callable, Deque, Dict, List, Optional
+from typing import (Any, Callable, Deque, Dict, List, Optional, Protocol,
+                    runtime_checkable)
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +37,97 @@ from repro.models import model as model_lib
 from repro.serving import kvcache
 
 
+# --------------------------------------------------------------------- #
+# the generic streaming contract
+# --------------------------------------------------------------------- #
+@runtime_checkable
+class StreamingEngine(Protocol):
+    """What it means to serve a stream: submit requests, step the whole
+    active set as one batch, drain. Any engine exposing this contract
+    plugs into the same driver loops / examples / benchmarks."""
+
+    slots: int
+
+    def submit(self, request) -> None: ...
+
+    def step(self) -> int:
+        """Admit waiting requests and advance every active lane one
+        item. Returns the number of items emitted."""
+        ...
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List: ...
+
+
+class SlotScheduler:
+    """Slot bookkeeping shared by every StreamingEngine here.
+
+    Subclasses implement the payload hooks:
+      _begin(request, slot) -> state   admit one request into a lane
+      _step_active() -> int            one batched step over ``active``
+      _done(state) -> bool             has this lane's request finished?
+      _release(state)                  free lane-held resources
+
+    Lane states must expose ``.slot`` and a writable ``.finished``.
+    """
+
+    def __init__(self, slots: int):
+        self.slots = slots
+        self.free: Deque[int] = deque(range(slots))
+        self.active: Dict[int, Any] = {}       # slot -> state
+        self.queue: Deque[Any] = deque()
+        self.finished: List[Any] = []
+
+    # ---------------- request lifecycle ---------------------------- #
+    def submit(self, request) -> None:
+        self.queue.append(request)
+
+    def _admit(self) -> None:
+        while self.queue and self.free:
+            req = self.queue.popleft()
+            slot = self.free.popleft()
+            st = self._begin(req, slot)
+            self.active[slot] = st
+            self._maybe_finish(st)
+
+    def _maybe_finish(self, st) -> None:
+        if self._done(st) and not st.finished:
+            st.finished = True
+            self.finished.append(st)
+            del self.active[st.slot]
+            self._release(st)
+            self.free.append(st.slot)
+
+    # ---------------- one engine step ------------------------------ #
+    def step(self) -> int:
+        self._admit()
+        if not self.active:
+            return 0
+        return self._step_active()
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List:
+        steps = 0
+        while (self.queue or self.active) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished
+
+    # ---------------- payload hooks -------------------------------- #
+    def _begin(self, request, slot: int):
+        raise NotImplementedError
+
+    def _step_active(self) -> int:
+        raise NotImplementedError
+
+    def _done(self, st) -> bool:
+        raise NotImplementedError
+
+    def _release(self, st) -> None:
+        pass
+
+
+# --------------------------------------------------------------------- #
+# the transformer decode engine
+# --------------------------------------------------------------------- #
 @dataclasses.dataclass
 class Request:
     uid: int
@@ -47,21 +146,17 @@ class RequestState:
     finished: bool = False
 
 
-class Engine:
+class Engine(SlotScheduler):
     def __init__(self, cfg, params, *, slots: int = 4,
                  cache_len: int = 256,
                  sampler: Optional[Callable] = None):
+        super().__init__(slots)
         self.cfg = cfg.replace(decode_per_slot=True)
         self.params = params
-        self.slots = slots
         self.cache_len = cache_len
         self.sampler = sampler or (lambda logits, key:
                                    jnp.argmax(logits, axis=-1))
         self.cache = model_lib.init_cache(self.cfg, slots, cache_len)
-        self.free: Deque[int] = deque(range(slots))
-        self.active: Dict[int, RequestState] = {}   # slot -> state
-        self.queue: Deque[Request] = deque()
-        self.finished: List[RequestState] = []
         self.key = jax.random.PRNGKey(0)
 
         cfg1 = self.cfg
@@ -74,48 +169,34 @@ class Engine:
         self._next_tok = np.zeros((slots,), np.int32)
         self._pos = np.zeros((slots,), np.int32)
 
-    # ---------------- request lifecycle ---------------------------- #
-    def submit(self, req: Request):
-        self.queue.append(req)
+    # ---------------- scheduler hooks ------------------------------ #
+    def _begin(self, req: Request, slot: int) -> RequestState:
+        t0 = time.perf_counter()
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        logits, one_cache = self._prefill(self.params,
+                                          {"tokens": prompt})
+        self.key, k = jax.random.split(self.key)
+        first = int(self.sampler(logits, k)[0])
+        self.cache = kvcache.write_slot(self.cache, one_cache,
+                                        jnp.int32(slot))
+        st = RequestState(req, slot, pos=len(req.prompt),
+                          generated=[first],
+                          prefill_s=time.perf_counter() - t0)
+        self._next_tok[slot] = first
+        self._pos[slot] = st.pos
+        return st
 
-    def _admit(self):
-        while self.queue and self.free:
-            req = self.queue.popleft()
-            slot = self.free.popleft()
-            t0 = time.perf_counter()
-            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            logits, one_cache = self._prefill(self.params,
-                                              {"tokens": prompt})
-            self.key, k = jax.random.split(self.key)
-            first = int(self.sampler(logits, k)[0])
-            self.cache = kvcache.write_slot(self.cache, one_cache,
-                                            jnp.int32(slot))
-            st = RequestState(req, slot, pos=len(req.prompt),
-                              generated=[first],
-                              prefill_s=time.perf_counter() - t0)
-            self._next_tok[slot] = first
-            self._pos[slot] = st.pos
-            self.active[slot] = st
-            self._maybe_finish(st)
+    def _done(self, st: RequestState) -> bool:
+        return len(st.generated) >= st.request.max_new_tokens or \
+            (bool(st.generated) and
+             st.generated[-1] == st.request.eos_id)
 
-    def _maybe_finish(self, st: RequestState):
-        done = len(st.generated) >= st.request.max_new_tokens or \
-            (st.generated and st.generated[-1] == st.request.eos_id)
-        if done and not st.finished:
-            st.finished = True
-            self.finished.append(st)
-            del self.active[st.slot]
-            self.cache = kvcache.clear_slot(self.cache,
-                                            jnp.int32(st.slot))
-            self.free.append(st.slot)
+    def _release(self, st: RequestState) -> None:
+        self.cache = kvcache.clear_slot(self.cache, jnp.int32(st.slot))
 
-    # ---------------- one engine step ------------------------------ #
-    def step(self) -> int:
-        """Admit + one batched decode for all active lanes. Returns the
-        number of tokens emitted."""
-        self._admit()
-        if not self.active:
-            return 0
+    def _step_active(self) -> int:
+        """ONE batched decode for all active lanes, each at its own
+        position. Returns the number of tokens emitted."""
         toks = jnp.asarray(self._next_tok)[:, None]
         pos = jnp.asarray(self._pos)
         logits, self.cache = self._decode(self.params, self.cache,
@@ -131,11 +212,3 @@ class Engine:
             emitted += 1
             self._maybe_finish(st)
         return emitted
-
-    def run_until_drained(self, max_steps: int = 10_000
-                          ) -> List[RequestState]:
-        steps = 0
-        while (self.queue or self.active) and steps < max_steps:
-            self.step()
-            steps += 1
-        return self.finished

@@ -50,6 +50,19 @@ def test_smoke_logit_shapes(arch):
     assert jnp.isfinite(h.astype(jnp.float32)).all()
 
 
+def _grow_ring(cache, old_len: int):
+    """Pad every KV-ring leaf by one sequence slot (axis 2 of the
+    per-layer-stacked attention caches; non-attention leaves — mamba /
+    xLSTM state — never carry ``old_len`` there and pass through)."""
+    def pad(x):
+        if x.ndim >= 4 and x.shape[2] == old_len:
+            widths = [(0, 0)] * x.ndim
+            widths[2] = (0, 1)
+            return jnp.pad(x, widths)
+        return x
+    return jax.tree.map(pad, cache)
+
+
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_prefill_decode_consistency(arch):
     """decode_step after an (S-1)-token prefill must reproduce the
@@ -64,7 +77,15 @@ def test_prefill_decode_consistency(arch):
 
     _, cache = jax.jit(lambda p, b: M.prefill(cfg, p, b))(
         params, {"tokens": tokens[:, :S - 1]})
-    # pad ring caches up to the decode allocation if needed
+    # An (S-1)-token prefill allocates a ring of exactly S-1 slots, so
+    # decoding position S-1 would wrap (idx = (S-1) % (S-1) = 0) and
+    # EVICT token 0 from the attention window — once diagnosed as MoE
+    # routing noise, it was really this off-by-one in the harness: the
+    # missing-first-token window measured rel≈0.045 even for dense f32
+    # and 0.094 for MoE bf16 (routing flips amplify it). One extra ring
+    # slot gives the decode position a home; residual drift is pure
+    # bf16 prefill-vs-decode noise, ≤3e-3 for every arch incl. MoE.
+    cache = _grow_ring(cache, S - 1)
     dec_logits, _ = jax.jit(
         lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))(
         params, cache, tokens[:, S - 1:], jnp.asarray(S - 1, jnp.int32))
@@ -72,11 +93,7 @@ def test_prefill_decode_consistency(arch):
     err = jnp.max(jnp.abs(full_logits.astype(jnp.float32) -
                           dec_logits.astype(jnp.float32)))
     scale = jnp.max(jnp.abs(full_logits.astype(jnp.float32))) + 1e-6
-    # MoE archs: bf16 prefill-vs-decode hidden-state noise can flip a
-    # borderline top-k routing decision, a step change in the logits —
-    # allow a slightly wider band (moonshot measures rel=0.094 with no
-    # decode-path defect; this was latent while collection was broken).
-    tol = 0.12 if cfg.family == "moe" else 0.08
+    tol = 0.02
     assert err / scale < tol, f"{arch}: decode mismatch rel={err/scale}"
 
 
