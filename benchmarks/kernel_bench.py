@@ -28,6 +28,9 @@ same as part of the full suite).
 """
 import json
 import os
+import subprocess
+import sys
+import textwrap
 import time
 
 import jax
@@ -247,20 +250,144 @@ def _wallclock() -> dict:
                             "vs_oracle_rel": rel_chip}}
 
 
+# --------------------------------------------------------------------- #
+# fleet serving throughput: 1 vs N simulated devices
+# --------------------------------------------------------------------- #
+FLEET_DEVICES = 4
+
+# Runs in a subprocess for the same reason benchmarks/run.py seeds
+# dry-run cells in one: XLA's host-platform device count must be pinned
+# before jax initializes, which is impossible here (this module already
+# imported jax). One subprocess hosts FLEET_DEVICES simulated devices
+# and serves the same request load through the continuous-batching
+# router at fleet sizes 1 and FLEET_DEVICES. The measured win is lanes
+# per engine step: the simulated devices share one CPU, so this is the
+# batching/scheduling scaling of the fleet fabric (items/step grows
+# with fleet size at near-constant step latency), not real-FLOPs
+# scaling — on distinct hardware the same code scales compute too.
+_FLEET_SCRIPT = textwrap.dedent("""
+    import os
+    # force the host platform: the device-count flag only multiplies
+    # CPU devices, so with an accelerator visible the simulated fleet
+    # would never exist
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=%d")
+    import json, time
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.chip import compile_chip
+    from repro.core.crossbar_layer import MLPSpec, mlp_init
+    from repro.fleet import FleetRouter, shard_chip
+    from repro.serving.engine import ItemRequest
+
+    DIMS = %r
+    LANES = 8
+    N_REQ = 160            # >> total lanes: all configs stay saturated
+    ROUNDS = 8             # multi-device exec on the shared-CPU box is
+                           # scheduling-noisy; best-of-8 interleaved
+                           # rounds per size makes the ratio stable
+
+    spec = MLPSpec(DIMS, activation="threshold",
+                   out_activation="linear")
+    params = mlp_init(jax.random.PRNGKey(0), spec)
+    chip = compile_chip(spec, params=params)
+    rng = np.random.default_rng(0)
+    # ragged lengths (6..10 items): requests retire continuously, so
+    # throughput measures backfill under churn, not lockstep waves
+    bursts = [[ItemRequest(uid=i, items=rng.uniform(
+                   0, 1, (6 + i %% 5, DIMS[0])))
+               for i in range(N_REQ)] for _ in range(ROUNDS)]
+
+
+    def one_burst(fleet, burst):
+        router = FleetRouter(fleet, lanes_per_chip=LANES)
+        for r in burst:
+            router.submit(r)
+        t0 = time.perf_counter()
+        router.run_until_drained()
+        return router.items_emitted / (time.perf_counter() - t0)
+
+    fleets = {1: shard_chip(chip, 1), %d: shard_chip(chip, %d)}
+    for fleet in fleets.values():    # trace + compile the step shapes
+        w = FleetRouter(fleet, lanes_per_chip=LANES)
+        w.submit(ItemRequest(uid=-1,
+                             items=rng.uniform(0, 1, (2, DIMS[0]))))
+        w.run_until_drained()
+    # interleave rounds so a noisy window on this shared box hits both
+    # fleet sizes alike; best-of per size is then comparable
+    rounds = {n: [] for n in fleets}
+    for burst in bursts:
+        for n, fleet in fleets.items():
+            rounds[n].append(one_burst(fleet, burst))
+    r1, rN = max(rounds[1]), max(rounds[%d])
+    print(json.dumps({"devices": %d, "lanes_per_chip": LANES,
+                      "requests": N_REQ, "items_per_request": 8,
+                      "items_per_s_1chip": r1,
+                      "items_per_s_fleet": rN,
+                      "rounds": rounds,
+                      "scaling": rN / r1}))
+""")
+
+
+def _fleet_serve() -> dict:
+    print(f"\n== fleet_serve: continuous-batching router, 1 vs "
+          f"{FLEET_DEVICES} simulated devices ==")
+    script = _FLEET_SCRIPT % ((FLEET_DEVICES, MLP_DIMS) +
+                              (FLEET_DEVICES,) * 4)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + (os.pathsep + env["PYTHONPATH"]
+                                 if env.get("PYTHONPATH") else "")
+    env.pop("XLA_FLAGS", None)
+    # the device-count flag only multiplies CPU devices: an inherited
+    # JAX_PLATFORMS pointing at an accelerator would leave the
+    # subprocess with one device and no fleet to measure
+    env["JAX_PLATFORMS"] = "cpu"
+    try:
+        out = subprocess.run([sys.executable, "-c", script],
+                             capture_output=True, text=True, env=env,
+                             cwd=REPO_ROOT, timeout=900)
+    except (OSError, subprocess.TimeoutExpired) as e:
+        print(f"  fleet_serve subprocess failed: {e!r}")
+        return {"error": repr(e), "scaling": 0.0}
+    if out.returncode != 0:
+        print(f"  fleet_serve subprocess failed:\n{out.stderr[-2000:]}")
+        return {"error": out.stderr[-2000:], "scaling": 0.0}
+    try:
+        res = json.loads(out.stdout.strip().splitlines()[-1])
+    except (IndexError, ValueError) as e:
+        print(f"  fleet_serve emitted no result: {e!r}")
+        return {"error": f"unparseable output: {out.stdout[-500:]!r}",
+                "scaling": 0.0}
+    print(f"  1 chip : {res['items_per_s_1chip']:8.0f} items/s "
+          f"({res['lanes_per_chip']} lanes)")
+    print(f"  {res['devices']} chips: {res['items_per_s_fleet']:8.0f} "
+          f"items/s ({res['devices'] * res['lanes_per_chip']} lanes)")
+    print(f"  served-throughput scaling: {res['scaling']:.2f}x "
+          f"(gate > 1.5x)")
+    return res
+
+
 def run() -> dict:
     tiles = _structural_report()
     errs = _correctness()
     wc = _wallclock()
+    fleet = _fleet_serve()
     max_err = max(errs.values())
     ok = max_err < 1e-5 and wc["speedup"] >= 5.0 and \
-        wc["chip_stream"]["vs_oracle_rel"] <= 1e-5
+        wc["chip_stream"]["vs_oracle_rel"] <= 1e-5 and \
+        fleet.get("scaling", 0.0) > 1.5
     return {"tiles": tiles, "kernel_err": max_err, "kernel_errs": errs,
-            "wallclock": wc, "pass": bool(ok)}
+            "wallclock": wc, "fleet_serve": fleet, "pass": bool(ok)}
 
 
 def write_bench_json(result: dict,
                      path: str | None = None) -> str:
     path = path or os.path.join(REPO_ROOT, "BENCH_kernels.json")
+    # benchmarks/run.py stamps a wall-clock "seconds" onto suite
+    # results; strip it so the committed record is identical whichever
+    # entry point regenerated it
+    result = {k: v for k, v in result.items() if k != "seconds"}
     with open(path, "w") as f:
         json.dump(result, f, indent=1, sort_keys=True)
         f.write("\n")

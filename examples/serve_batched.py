@@ -1,5 +1,5 @@
 """Serving example: continuous batching over a reduced assigned arch,
-plus slot-scheduled streaming through a compiled crossbar chip.
+plus slot-scheduled streaming through a compiled crossbar chip fleet.
 
 Part 1 submits a burst of mixed-length LM requests, reports per-request
 latency, engine throughput and slot utilization. The decode step is the
@@ -7,10 +7,13 @@ exact function the multi-pod dry-run lowers for the ``decode_*`` shapes.
 
 Part 2 is the paper's own serving story through the SAME scheduler: an
 MLP classifier is compiled onto simulated 1T1M crossbars ONCE
-(``compile_chip``), then ``chip.serve()`` drives item streams through
-the programmed state — both engines implement the
+(``compile_chip``), fanned out over the visible devices
+(``shard_chip``), and the continuous-batching ``FleetRouter`` drives
+item streams through the programmed state — both engines implement the
 ``repro.serving.StreamingEngine`` contract, so the driver loop is
-identical.
+identical. (The old direct ``chip.serve()`` loop still exists for a
+single chip; the router is the same scheduler with admission control,
+latency accounting and multi-chip fan-out.)
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
@@ -22,6 +25,7 @@ import numpy as np
 from repro.chip import ChipRequest, compile_chip
 from repro.configs import get_reduced
 from repro.core.crossbar_layer import MLPSpec, mlp_init
+from repro.fleet import FleetRouter, shard_chip
 from repro.models import model as model_lib
 from repro.serving.engine import Engine, Request
 
@@ -57,38 +61,40 @@ def main():
 
 
 def serve_crossbar_stream(n_requests: int = 12, slots: int = 4):
-    """Compile a classifier chip once, then let the slot scheduler
-    serve a burst of item streams against the programmed state
-    (§III.D stream-many — the chip side of the StreamingEngine
-    contract)."""
-    print("\n== compiled-chip classifier serving (chip.serve) ==")
+    """Compile a classifier chip once, fan it out as a fleet, then let
+    the continuous-batching router serve a burst of item streams
+    against the programmed state (§III.D stream-many — the chip side
+    of the StreamingEngine contract)."""
+    print("\n== compiled-chip classifier serving (fleet router) ==")
     spec = MLPSpec((64, 48, 10), activation="threshold",
                    out_activation="linear")
     params = mlp_init(jax.random.PRNGKey(0), spec)
 
     t0 = time.perf_counter()
     chip = compile_chip(spec, params=params, system="memristor")
+    fleet = shard_chip(chip)        # one chip per visible device
     t_prog = time.perf_counter() - t0
 
-    eng = chip.serve(slots=slots)
+    eng = FleetRouter(fleet, lanes_per_chip=slots)
     rng = np.random.default_rng(1)
     reqs = [ChipRequest(uid=i, items=rng.uniform(-1, 1, (8 + 5 * (i % 4),
                                                          64)))
             for i in range(n_requests)]
     for r in reqs:
         eng.submit(r)
-    t0 = time.perf_counter()
-    steps = 0
-    while eng.queue or eng.active:
-        eng.step()                 # ONE chip.stream batch per step
-        steps += 1
-    t_serve = time.perf_counter() - t0
-    served = sum(st.result.shape[0] for st in eng.finished)
+    eng.run_until_drained()        # ONE fleet.stream batch per step
+    stats = eng.stats()
     print(f"  compiled once in {t_prog * 1e3:.1f} ms "
-          f"({chip.total_cores} cores); {len(reqs)} requests / {served} "
-          f"items in {steps} engine steps, {t_serve * 1e3:.1f} ms "
-          f"({served / t_serve:.0f} items/s; slot efficiency "
-          f"{served / max(steps * slots, 1):.0%}; zero re-programming)")
+          f"({fleet.total_cores} cores on {fleet.n_chips} chip(s)); "
+          f"{len(reqs)} requests / {stats.items} "
+          f"items in {stats.steps} engine steps, "
+          f"{stats.wall_s * 1e3:.1f} ms "
+          f"({stats.items_per_second:.0f} items/s; slot efficiency "
+          f"{stats.occupancy:.0%}; zero re-programming)")
+    print(f"  per-request latency: p50 "
+          f"{stats.latency_s_p50 * 1e3:.1f} ms, p95 "
+          f"{stats.latency_s_p95 * 1e3:.1f} ms "
+          f"(mean queue wait {stats.wait_s_mean * 1e3:.1f} ms)")
 
 
 if __name__ == "__main__":

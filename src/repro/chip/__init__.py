@@ -9,11 +9,13 @@
 See :mod:`repro.chip.compile` for the full design notes.
 Self-check:  PYTHONPATH=src python -m repro.chip --selftest
 """
-from repro.chip.compile import (CompiledChip, StreamLayer, compile_app,
-                                compile_chip)
+from repro.chip.compile import (ChipRateWarning, CompiledChip,
+                                StreamLayer, compile_app, compile_chip,
+                                stream_pipeline)
 from repro.chip.report import ChipReport, chip_report
 from repro.chip.serving import ChipEngine, ChipRequest, ChipRequestState
 
-__all__ = ["CompiledChip", "StreamLayer", "compile_app", "compile_chip",
+__all__ = ["ChipRateWarning", "CompiledChip", "StreamLayer",
+           "compile_app", "compile_chip", "stream_pipeline",
            "ChipReport", "chip_report",
            "ChipEngine", "ChipRequest", "ChipRequestState"]

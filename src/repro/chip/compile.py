@@ -42,6 +42,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import warnings
 from typing import Any, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -183,14 +184,18 @@ def _apply_stream_layer(layer: StreamLayer, x: jax.Array,
     return q.make_activation(layer.activation)(out)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("use_kernel", "replication"))
-def _stream(plan: Tuple[StreamLayer, ...], x: jax.Array,
-            use_kernel: bool = False, replication: int = 1) -> jax.Array:
+def stream_pipeline(plan: Tuple[StreamLayer, ...], x: jax.Array,
+                    use_kernel: bool = False,
+                    replication: int = 1) -> jax.Array:
     """Stage-ordered evaluation of the whole mapped pipeline, with
     replica fan-out: the batch is dealt across the ``replication``
     identical pipeline copies (§V.C), each streaming its shard through
-    the same programmed image."""
+    the same programmed image.
+
+    Un-jitted on purpose: :meth:`CompiledChip.stream` wraps it in the
+    module-level jit below, and ``repro.fleet.shard`` calls it inside a
+    ``shard_map`` body (one chip replica per mesh device), where the
+    outer jit already owns the trace."""
     def replica(xb):
         h = xb
         for layer in plan:
@@ -205,6 +210,11 @@ def _stream(plan: Tuple[StreamLayer, ...], x: jax.Array,
     xp = jnp.pad(x, ((0, pad), (0, 0)))
     out = jax.vmap(replica)(xp.reshape(replication, per, -1))
     return out.reshape(replication * per, -1)[:B]
+
+
+_stream = functools.partial(jax.jit,
+                            static_argnames=("use_kernel",
+                                             "replication"))(stream_pipeline)
 
 
 # --------------------------------------------------------------------- #
@@ -322,6 +332,38 @@ jax.tree_util.register_pytree_node(CompiledChip, _chip_flatten,
 NetworksLike = Union[MLPSpec, ProgrammedMLP, Net, Sequence[Net]]
 
 
+class ChipRateWarning(UserWarning):
+    """The requested items_per_second exceeds what the routed fabric's
+    TDM link schedule can sustain."""
+
+
+def _validate_rate(items_per_second: float, mapping,
+                   route: routing_lib.RouteReport,
+                   strict: bool) -> None:
+    """items_per_second sizes the replica fan-out against COMPUTE
+    capacity (§V.C), but each replica's mesh is also a static TDM
+    network whose busiest link forwards LINK_BITS per cycle — a rate a
+    replica's cores could hit may still be un-routable. Validate the
+    per-replica rate against the routed schedule at compile time."""
+    if not items_per_second:
+        return
+    per_replica = items_per_second / mapping.replication
+    limit = route.max_items_per_second
+    if per_replica <= limit * (1.0 + 1e-9):
+        return
+    msg = (f"compile_chip: items_per_second={items_per_second:g} is "
+           f"infeasible on the routed fabric: each of the "
+           f"{mapping.replication} replica(s) must stream "
+           f"{per_replica:g} items/s, but the busiest mesh link's TDM "
+           f"frame is {route.schedule_cycles} cycles/item, capping a "
+           f"replica at {limit:g} items/s. Use a larger core geometry "
+           f"(fewer row chunks -> less mesh traffic), lower the target "
+           f"rate, or split the load across chips (repro.fleet).")
+    if strict:
+        raise ValueError(msg)
+    warnings.warn(msg, ChipRateWarning, stacklevel=3)
+
+
 def _spec_dims(prog: ProgrammedMLP) -> Tuple[int, ...]:
     dims = [prog.layers[0].d_in]
     for lp in prog.layers:
@@ -340,7 +382,8 @@ def compile_chip(networks: NetworksLike, *,
                  r_seg: float = 0.0,
                  sensor_flags: Optional[Sequence[bool]] = None,
                  deps: Optional[Sequence[Sequence[int]]] = None,
-                 tsv_bits_per_item: Optional[float] = None
+                 tsv_bits_per_item: Optional[float] = None,
+                 strict_rate: bool = False
                  ) -> CompiledChip:
     """Compile networks onto a chip: split → pack → place → route, then
     program every mapped group's tile state.
@@ -357,7 +400,9 @@ def compile_chip(networks: NetworksLike, *,
 
     ``system`` is ``"memristor"`` (1T1M crossbar cores) or
     ``"digital"`` (SRAM cores); ``items_per_second`` sizes the replica
-    fan-out to the application's real-time rate (§V.C).
+    fan-out to the application's real-time rate (§V.C) and is validated
+    against the routed TDM link capacity: an un-routable rate warns
+    (:class:`ChipRateWarning`) or, with ``strict_rate=True``, raises.
     """
     if system == "1t1m":
         system = "memristor"
@@ -401,6 +446,7 @@ def compile_chip(networks: NetworksLike, *,
                            items_per_second=items_per_second,
                            sensor_flags=sensor_flags, deps=deps)
     route = routing_lib.route(mapping)
+    _validate_rate(items_per_second, mapping, route, strict_rate)
 
     plan: Optional[Tuple[StreamLayer, ...]] = None
     if prog is not None:

@@ -4,84 +4,39 @@ The same :class:`repro.serving.SlotScheduler` that drives the
 transformer decode engine drives the sensor-app chip: a fixed pool of
 lanes, each active lane feeding the chip ONE item per engine step (the
 paper's fixed-rate streaming discipline, §V.C), all lanes evaluated in
-a single ``chip.stream`` batch. Free lanes are padded with zeros so
-every step runs the one compiled (slots, d_in) shape — no retracing as
-lanes retire.
+a single ``chip.stream`` batch. The batching/backfill/latency logic
+lives in :class:`repro.serving.engine.ItemStreamScheduler`; this module
+only binds it to one ``CompiledChip``. For a fleet of chips across a
+device mesh, use :class:`repro.fleet.FleetRouter` — the same scheduler
+over a :class:`repro.fleet.ShardedChip`.
 """
 from __future__ import annotations
-
-import dataclasses
-from typing import List, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.engine import SlotScheduler
+from repro.serving.engine import (ItemRequest, ItemRequestState,
+                                  ItemStreamScheduler)
+
+# historic names, re-exported through repro.chip
+ChipRequest = ItemRequest
+ChipRequestState = ItemRequestState
 
 
-@dataclasses.dataclass
-class ChipRequest:
-    """A stream of items for the chip: (n_items, d_in) float array
-    (a single (d_in,) item is promoted to a 1-item stream)."""
-    uid: int
-    items: np.ndarray
-
-
-@dataclasses.dataclass
-class ChipRequestState:
-    request: ChipRequest
-    slot: int
-    pos: int = 0                        # next item to feed
-    outputs: List[np.ndarray] = dataclasses.field(default_factory=list)
-    finished: bool = False
-
-    @property
-    def result(self) -> np.ndarray:
-        """(n_items, d_out) chip outputs in request order."""
-        return np.stack(self.outputs) if self.outputs else \
-            np.zeros((0, 0), np.float32)
-
-
-class ChipEngine(SlotScheduler):
+class ChipEngine(ItemStreamScheduler):
     """StreamingEngine over a :class:`repro.chip.CompiledChip`."""
 
     def __init__(self, chip, *, slots: int = 4,
-                 use_kernel: bool = False):
+                 use_kernel: bool = False, queue_limit=None):
         if chip.plan is None:
             raise ValueError("chip.serve() needs a streamable chip "
                              "(compiled with weights); this one is "
                              "analytic-only")
-        super().__init__(slots)
+        super().__init__(chip.dims[0], slots=slots,
+                         queue_limit=queue_limit)
         self.chip = chip
         self.use_kernel = use_kernel
-        self.d_in = chip.dims[0]
-        self._batch = np.zeros((slots, self.d_in), np.float32)
 
-    # ---------------- scheduler hooks ------------------------------ #
-    def _begin(self, req: ChipRequest, slot: int) -> ChipRequestState:
-        items = np.asarray(req.items, np.float32)
-        if items.ndim == 1:
-            items = items[None, :]
-        if items.shape[-1] != self.d_in:
-            raise ValueError(f"request {req.uid}: items have "
-                             f"{items.shape[-1]} features, chip streams "
-                             f"{self.d_in}")
-        req.items = items
-        return ChipRequestState(req, slot)
-
-    def _done(self, st: ChipRequestState) -> bool:
-        return st.pos >= st.request.items.shape[0]
-
-    def _step_active(self) -> int:
-        self._batch[:] = 0.0
-        for slot, st in self.active.items():
-            self._batch[slot] = st.request.items[st.pos]
-        out = np.asarray(self.chip.stream(jnp.asarray(self._batch),
-                                          use_kernel=self.use_kernel))
-        emitted = 0
-        for slot, st in list(self.active.items()):
-            st.outputs.append(out[slot])
-            st.pos += 1
-            emitted += 1
-            self._maybe_finish(st)
-        return emitted
+    def _stream_batch(self, batch: np.ndarray) -> np.ndarray:
+        return np.asarray(self.chip.stream(jnp.asarray(batch),
+                                           use_kernel=self.use_kernel))

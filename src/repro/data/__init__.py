@@ -1,3 +1,4 @@
-from repro.data.pipeline import TokenPipeline, PipelineState
+from repro.data.pipeline import (TokenPipeline, PipelineState,
+                                 SensorPipeline)
 from repro.data.images import (mnist_like, cifar_like, chars_like,
                                sensor_stream)

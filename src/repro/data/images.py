@@ -83,10 +83,15 @@ def chars_like(seed: int = 0, n: int = 1024
     return _dataset(seed, n, 50, 50, 1, 26, noise=0.08)
 
 
-def sensor_stream(seed: int, frames: int, h: int = 64, w: int = 64
-                  ) -> jax.Array:
+def sensor_stream(seed: int, frames: int, h: int = 64, w: int = 64,
+                  start: int = 0) -> jax.Array:
     """A moving-pattern frame stream for the edge/motion pipelines:
-    (frames, h, w) in [0,1] with per-frame translation (real motion)."""
+    (frames, h, w) in [0,1] with per-frame translation (real motion).
+
+    Each frame is a pure function of its absolute index, so
+    ``sensor_stream(s, n, start=k)`` is exactly frames [k, k+n) of the
+    infinite stream — the property ``repro.data.SensorPipeline`` needs
+    to make window batches a pure function of (seed, step)."""
     key = jax.random.PRNGKey(seed)
     base = _grating(h, w, 0.6, 4.0, 0.0) * 0.7 \
         + 0.3 * _blob(h, w, 0.5, 0.5, 0.2)
@@ -97,4 +102,4 @@ def sensor_stream(seed: int, frames: int, h: int = 64, w: int = 64
                                  axis=0),
                         (i * vel[1]).astype(jnp.int32), axis=1)
 
-    return jax.vmap(frame)(jnp.arange(frames))
+    return jax.vmap(frame)(start + jnp.arange(frames))

@@ -87,6 +87,72 @@ class TokenPipeline:
         return jax.tree.map(lambda x: x[lo:lo + per], batch)
 
 
+@dataclasses.dataclass(frozen=True)
+class SensorPipeline:
+    """The paper's I/O model as a data pipeline: a procedural sensor
+    frame stream (``repro.data.images.sensor_stream``), windowed and
+    strided into chip-sized items the way the TSV-fed DAC cores consume
+    pixels (§II.C) — e.g. 28x28 windows of a 64x64 frame at stride 18
+    are nine 784-feature items per frame, the deep app's input shape.
+
+    Same contract as :class:`TokenPipeline`: a batch is a *pure
+    function* of ``(seed, step)`` (each frame is a pure function of its
+    absolute index), so a streaming frontend over it checkpoints as two
+    integers and replays exactly on any process count.
+    """
+    window: int = 28
+    stride: int = 18
+    height: int = 64
+    width: int = 64
+    frames_per_step: int = 1
+    seed: int = 0
+
+    def __post_init__(self):
+        if not (1 <= self.window <= min(self.height, self.width)):
+            raise ValueError(
+                f"SensorPipeline: window {self.window} must fit the "
+                f"{self.height}x{self.width} frame")
+        if self.stride < 1 or self.frames_per_step < 1:
+            raise ValueError("SensorPipeline: stride and "
+                             "frames_per_step must be >= 1")
+
+    @property
+    def d_item(self) -> int:
+        """Features per item (window pixels, flattened)."""
+        return self.window * self.window
+
+    @property
+    def windows_per_frame(self) -> int:
+        rows = len(range(0, self.height - self.window + 1, self.stride))
+        cols = len(range(0, self.width - self.window + 1, self.stride))
+        return rows * cols
+
+    @property
+    def items_per_step(self) -> int:
+        return self.windows_per_frame * self.frames_per_step
+
+    def state(self, step: int) -> PipelineState:
+        return PipelineState(self.seed, step)
+
+    def batch(self, step: int) -> jax.Array:
+        """(items_per_step, d_item) windows for ``step`` — pure,
+        deterministic, frames [step*fps, (step+1)*fps) of the stream."""
+        from repro.data.images import sensor_stream
+        frames = sensor_stream(self.seed, self.frames_per_step,
+                               self.height, self.width,
+                               start=step * self.frames_per_step)
+        offs = [(r, c)
+                for r in range(0, self.height - self.window + 1,
+                               self.stride)
+                for c in range(0, self.width - self.window + 1,
+                               self.stride)]
+        wins = [frames[:, r:r + self.window, c:c + self.window]
+                for (r, c) in offs]
+        # (fps, wpf, window, window) → frame-major item order
+        stack = jnp.stack(wins, axis=1)
+        return stack.reshape(self.items_per_step, self.d_item)
+
+
 def embeds_batch(key, batch: int, seq: int, d_model: int,
                  vocab: int) -> Dict[str, jax.Array]:
     """Frontend-stub batch for vlm/audio architectures: precomputed

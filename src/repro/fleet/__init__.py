@@ -1,0 +1,49 @@
+"""repro.fleet — multi-chip streaming fabric with continuous batching.
+
+One :func:`repro.chip.compile_chip` result, served as a fleet:
+
+  fleet = shard_chip(chip, n_chips)        # one chip copy per device
+  y = fleet.stream(x)                      # == chip.stream(x), rel 0.0
+  router = fleet.serve(lanes_per_chip=8)   # continuous-batching router
+  router.serve(StreamSource(SensorPipeline()))   # sensor-fed loop
+  print(fleet.report(router))              # hardware + served roll-up
+
+Self-check:  PYTHONPATH=src python -m repro.fleet --selftest
+(runs itself on 2 simulated host devices).
+
+Submodule imports are lazy (PEP 562) so importing ``repro.fleet`` —
+and in particular ``python -m repro.fleet`` booting this package —
+never initializes jax; the CLI can still pin
+``--xla_force_host_platform_device_count`` first.
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    "ShardedChip": "repro.fleet.shard",
+    "shard_chip": "repro.fleet.shard",
+    "FleetRouter": "repro.fleet.router",
+    "FleetRequest": "repro.fleet.router",
+    "RouterStats": "repro.fleet.router",
+    "BoundedQueue": "repro.fleet.source",
+    "StreamSource": "repro.fleet.source",
+    "FleetReport": "repro.fleet.report",
+    "fleet_report": "repro.fleet.report",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    value = getattr(importlib.import_module(mod), name)
+    globals()[name] = value
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

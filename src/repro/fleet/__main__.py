@@ -1,0 +1,172 @@
+"""CI smoke entry point:  PYTHONPATH=src python -m repro.fleet --selftest
+
+Runs itself on simulated host devices (default 2; ``--devices N``): the
+flag is pinned into XLA_FLAGS before jax initializes, which is why
+``repro.fleet``'s package imports are lazy. Checks that the sharded
+fleet stream is bit-identical to the single chip across ≥2 devices,
+that the continuous-batching router backfills ragged traffic and its
+outputs match the direct stream, that the sensor-stream frontend
+respects backpressure, that the fleet report composes the per-chip
+accounting, and that compile-time rate validation fires. Exit code 0
+iff all checks pass.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def selftest(verbose: bool = True) -> bool:
+    import warnings
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.chip import ChipRateWarning, compile_chip
+    from repro.core.crossbar_layer import MLPSpec, mlp_init
+    from repro.data.pipeline import SensorPipeline
+    from repro.fleet import FleetRouter, StreamSource, shard_chip
+    from repro.serving.engine import ItemRequest
+
+    ok = True
+
+    def check(name, cond, detail=""):
+        nonlocal ok
+        ok = ok and bool(cond)
+        if verbose:
+            print(f"  [{'ok' if cond else 'FAIL'}] {name}"
+                  f"{'  (' + detail + ')' if detail else ''}")
+
+    n_dev = len(jax.devices())
+    check("simulated fleet devices", n_dev >= 2, f"{n_dev} devices")
+
+    # one compiled chip, fanned out over every device
+    dims = (784, 200, 100, 10)
+    spec = MLPSpec(dims, activation="threshold", out_activation="linear")
+    params = mlp_init(jax.random.PRNGKey(0), spec)
+    chip = compile_chip(spec, params=params, system="memristor")
+    fleet = shard_chip(chip)
+    check("fleet spans all devices", fleet.n_chips == n_dev)
+
+    x = jax.random.uniform(jax.random.PRNGKey(1), (4 * n_dev + 3, 784),
+                           minval=0, maxval=1)
+    y, ref = fleet.stream(x), chip.stream(x)
+    rel = float(jnp.max(jnp.abs(y - ref)) /
+                jnp.maximum(jnp.max(jnp.abs(ref)), 1e-12))
+    check("sharded stream == single chip (rel 0.0)", rel == 0.0,
+          f"rel {rel:.1e} over {fleet.n_chips} chips")
+
+    # continuous batching: ragged burst + mid-stream arrivals backfill
+    router = FleetRouter(fleet, lanes_per_chip=2)
+    rng = np.random.default_rng(2)
+    first = [ItemRequest(uid=i, items=rng.uniform(0, 1, (3 + 2 * i, 784)))
+             for i in range(3)]
+    for r in first:
+        router.submit(r)
+    for _ in range(2):
+        router.step()
+    late = [ItemRequest(uid=10 + i, items=rng.uniform(0, 1, (2, 784)))
+            for i in range(2 * n_dev)]
+    for r in late:
+        router.submit(r)
+    done = router.run_until_drained()
+    check("router drains ragged + late traffic",
+          len(done) == len(first) + len(late))
+    match = all(
+        np.allclose(st.result,
+                    np.asarray(chip.stream(jnp.asarray(st.request.items))),
+                    atol=1e-5) for st in done)
+    check("routed outputs match direct stream", match)
+    lat_ok = all(st.request.t_submit <= st.t_admit <= st.t_done
+                 for st in done)
+    check("latency accounting is monotonic", lat_ok)
+    stats = router.stats()
+    check("router stats roll up", stats.requests == len(done) and
+          stats.items == sum(st.result.shape[0] for st in done),
+          str(stats))
+
+    # sensor-stream frontend: windowed items, bounded-queue backpressure
+    pipe = SensorPipeline(window=28, stride=18, frames_per_step=1)
+    check("sensor windows are chip items", pipe.d_item == dims[0] and
+          pipe.items_per_step == 9)
+    src = StreamSource(pipe, n_requests=12, capacity=3)
+    made = src.pump()
+    check("backpressure caps production", made == 3 and
+          src.pump() == 0 and src.stalls == 2,
+          f"{made} staged of 12, capacity 3, {src.stalls} stalls")
+    router2 = FleetRouter(fleet, lanes_per_chip=2, queue_limit=4)
+    done2 = router2.serve(src)
+    all_items = jnp.concatenate(
+        [jnp.asarray(st.request.items) for st in
+         sorted(done2, key=lambda s: s.request.uid)])
+    want = chip.stream(all_items)
+    got = np.concatenate([st.result for st in
+                          sorted(done2, key=lambda s: s.request.uid)])
+    check("sensor-fed serve loop drains the stream",
+          len(done2) == 12 and src.exhausted)
+    check("sensor-fed outputs match direct stream",
+          np.allclose(got, np.asarray(want), atol=1e-5))
+
+    # fleet report composes the per-chip accounting linearly
+    rep = fleet.report(router2)
+    chip_rep = chip.report()
+    check("fleet report composes per-chip accounting",
+          rep.n_chips == n_dev and
+          abs(rep.power_mw - n_dev * chip_rep.power_mw) < 1e-9 and
+          abs(rep.area_mm2 - n_dev * chip_rep.area_mm2) < 1e-9 and
+          rep.served is not None and rep.served.items > 0)
+
+    # compile-time TDM rate validation (satellite: both sides)
+    feasible_ok = True
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", ChipRateWarning)
+            compile_chip(spec, params=params, items_per_second=1e4)
+    except Exception:
+        feasible_ok = False
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        probe = compile_chip(spec, params=params)
+        bad = 1e3 * probe.route.max_items_per_second
+        compile_chip(spec, params=params, items_per_second=bad)
+        warned = any(issubclass(w.category, ChipRateWarning)
+                     for w in caught)
+    raised = False
+    try:
+        compile_chip(spec, params=params, items_per_second=bad,
+                     strict_rate=True)
+    except ValueError:
+        raised = True
+    check("rate validation: feasible silent, infeasible warns/raises",
+          feasible_ok and warned and raised)
+
+    if verbose:
+        print(f"selftest: {'PASS' if ok else 'FAIL'}")
+    return ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.fleet")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run the shard→route→serve smoke check")
+    ap.add_argument("--devices", type=int, default=2,
+                    help="simulated host devices (default 2; ignored "
+                         "when jax is already initialized or XLA_FLAGS "
+                         "is set)")
+    args = ap.parse_args(argv)
+    if not args.selftest:
+        ap.print_help()
+        return 2
+    if "jax" not in sys.modules and "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_"
+                                   f"count={args.devices}")
+        # the device-count flag only multiplies CPU devices; with an
+        # accelerator visible the simulated fleet would never exist
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    return 0 if selftest() else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,160 @@
+"""Continuous-batching request router over a chip fleet.
+
+The fixed-slot :class:`repro.chip.ChipEngine` binds the generic
+slot-scheduled streaming contract to ONE chip; the router binds it to a
+:class:`repro.fleet.ShardedChip`: ``lanes_per_chip × n_chips`` lanes,
+one batched fleet step per engine step, slot backfill between steps
+(arriving requests drop into lanes the moment one frees, never stalling
+resident streams), bounded-queue admission control for upstream
+backpressure, and per-request latency accounting
+(submit → admit → first item → done, in both seconds and engine steps).
+
+``serve(source)`` is the closed loop the paper's I/O model assumes: a
+sensor-stream frontend (:mod:`repro.fleet.source`) pumps windowed items
+under backpressure while the router streams the active set — continuous
+traffic, not a pre-staged burst.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.serving.engine import (ItemRequest, ItemRequestState,
+                                  ItemStreamScheduler)
+
+# the fleet speaks the same request language as the chip engine
+FleetRequest = ItemRequest
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterStats:
+    """Roll-up of one router run (latencies over finished requests)."""
+    requests: int
+    items: int
+    steps: int
+    wall_s: float
+    items_per_second: float
+    occupancy: float                    # items / (steps × lanes)
+    wait_s_mean: float                  # submit → lane admission
+    latency_s_mean: float               # submit → last item
+    latency_s_p50: float
+    latency_s_p95: float
+    rejected: int                       # submits refused (queue full)
+
+    def __str__(self) -> str:
+        return (f"RouterStats[{self.requests} req / {self.items} items "
+                f"in {self.steps} steps, {self.wall_s * 1e3:.1f} ms: "
+                f"{self.items_per_second:.0f} items/s, occupancy "
+                f"{self.occupancy:.0%}, latency p50 "
+                f"{self.latency_s_p50 * 1e3:.1f} ms / p95 "
+                f"{self.latency_s_p95 * 1e3:.1f} ms]")
+
+
+class FleetRouter(ItemStreamScheduler):
+    """StreamingEngine over a :class:`repro.fleet.ShardedChip` (or any
+    payload with ``.stream(batch)`` and ``.d_in`` — a bare
+    ``CompiledChip`` is a 1-chip fleet)."""
+
+    def __init__(self, fleet, *, lanes_per_chip: int = 4,
+                 use_kernel: bool = False,
+                 queue_limit: Optional[int] = None):
+        # a bare CompiledChip compiled without weights has plan=None
+        # (ShardedChip already rejects those at shard time)
+        if getattr(fleet, "plan", 1) is None:
+            raise ValueError("FleetRouter needs a streamable chip "
+                             "(compiled with weights); this one is "
+                             "analytic-only")
+        n_chips = getattr(fleet, "n_chips", 1)
+        super().__init__(fleet.d_in if hasattr(fleet, "d_in")
+                         else fleet.dims[0],
+                         slots=lanes_per_chip * n_chips,
+                         queue_limit=queue_limit)
+        self.fleet = fleet
+        self.n_chips = n_chips
+        self.lanes_per_chip = lanes_per_chip
+        self.use_kernel = use_kernel
+        self._t_start: Optional[float] = None
+        self._t_last: float = 0.0
+
+    # ---------------- payload ------------------------------------- #
+    def _stream_batch(self, batch: np.ndarray) -> np.ndarray:
+        # host-to-host path when the payload offers one (ShardedChip
+        # scatters the host batch into the chip layout itself; going
+        # through a jax-array return would add a device round-trip
+        # per engine step)
+        host = getattr(self.fleet, "stream_host", None)
+        if host is not None:
+            return host(batch, use_kernel=self.use_kernel)
+        return np.asarray(self.fleet.stream(batch,
+                                            use_kernel=self.use_kernel))
+
+    def step(self) -> int:
+        if self._t_start is None:
+            self._t_start = time.perf_counter()
+        emitted = super().step()
+        self._t_last = time.perf_counter()
+        return emitted
+
+    # ---------------- the closed serving loop ---------------------- #
+    def serve(self, source, *,
+              max_steps: int = 100_000) -> List[ItemRequestState]:
+        """Drain a bounded source end-to-end under backpressure.
+
+        Each iteration: let the source produce into its bounded queue
+        (it stops when full — backpressure), admit as many waiting
+        requests as this router's admission queue accepts (a rejected
+        request stays queued at the source, un-dropped), then run one
+        batched fleet step. Returns the finished states.
+
+        ``max_steps`` bounds loop ITERATIONS, not just engine steps, so
+        the loop terminates even if admission never makes progress.
+        """
+        if self.queue_limit is not None and self.queue_limit < 1:
+            raise ValueError(
+                "FleetRouter.serve() needs queue_limit >= 1: a "
+                "zero-capacity admission queue can never admit a "
+                "request, so the serve loop could not make progress")
+        for _ in range(max_steps):
+            source.pump()
+            while True:
+                req = source.peek()
+                if req is None or not self.submit(req):
+                    break
+                source.take()
+            if not (self.queue or self.active):
+                if source.exhausted:
+                    break
+                source.pump()
+                if source.peek() is None:
+                    break               # source dry and nothing queued
+                continue
+            self.step()
+        return self.finished
+
+    # ---------------- accounting ----------------------------------- #
+    def stats(self) -> RouterStats:
+        lat = np.asarray([st.latency_s for st in self.finished]) \
+            if self.finished else np.zeros((0,))
+        wait = np.asarray([st.wait_s for st in self.finished]) \
+            if self.finished else np.zeros((0,))
+        wall = (self._t_last - self._t_start) \
+            if self._t_start is not None else 0.0
+        return RouterStats(
+            requests=len(self.finished),
+            items=self.items_emitted,
+            steps=self.steps,
+            wall_s=wall,
+            items_per_second=self.items_emitted / wall if wall else 0.0,
+            occupancy=self.items_emitted / max(self.steps * self.slots,
+                                               1),
+            wait_s_mean=float(wait.mean()) if wait.size else 0.0,
+            latency_s_mean=float(lat.mean()) if lat.size else 0.0,
+            latency_s_p50=float(np.percentile(lat, 50))
+            if lat.size else 0.0,
+            latency_s_p95=float(np.percentile(lat, 95))
+            if lat.size else 0.0,
+            rejected=self.rejected,
+        )

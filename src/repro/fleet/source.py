@@ -1,0 +1,120 @@
+"""Sensor-stream frontends: bounded request sources with backpressure.
+
+The paper's chips "process data directly from sensors" — items arrive
+continuously at the TSV interface, they are not pre-staged in host
+memory. This module models that regime for the fleet router: a
+*source* turns a deterministic ``repro.data`` pipeline (e.g.
+:class:`repro.data.SensorPipeline`, whose batches are pure functions of
+``(seed, step)``) into a stream of :class:`ItemRequest`s through a
+bounded queue. ``pump()`` produces only while the queue has room, so a
+slow consumer stalls production (backpressure) instead of buffering the
+whole stream; a checkpoint of the source is just the pipeline step
+already produced.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, Deque, Optional
+
+import numpy as np
+
+from repro.serving.engine import ItemRequest
+
+
+class BoundedQueue:
+    """A fixed-capacity FIFO: ``offer`` returns False when full (the
+    producer's backpressure signal), ``poll`` returns None when empty."""
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError("BoundedQueue needs capacity >= 1")
+        self.capacity = capacity
+        self._q: Deque[Any] = deque()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    @property
+    def full(self) -> bool:
+        return len(self._q) >= self.capacity
+
+    @property
+    def empty(self) -> bool:
+        return not self._q
+
+    def offer(self, item) -> bool:
+        if self.full:
+            return False
+        self._q.append(item)
+        return True
+
+    def peek(self):
+        return self._q[0] if self._q else None
+
+    def poll(self):
+        return self._q.popleft() if self._q else None
+
+
+class StreamSource:
+    """Adapt a ``(seed, step)``-pure pipeline into a bounded request
+    stream.
+
+    ``pipeline`` needs one method, ``batch(step) -> (n, d) array``;
+    each pipeline step becomes one request of ``n`` items (for
+    :class:`repro.data.SensorPipeline`, one sensor frame's windows —
+    the granularity at which a frame grabber would hand data over).
+    ``n_requests`` bounds the stream (None = endless); ``capacity``
+    bounds the staging queue, and is the knob that trades frontend
+    memory against the router's ability to backfill.
+    """
+
+    def __init__(self, pipeline, *, n_requests: Optional[int] = 16,
+                 capacity: int = 8, start_step: int = 0,
+                 uid_base: int = 0):
+        self.pipeline = pipeline
+        self.n_requests = n_requests
+        self.queue = BoundedQueue(capacity)
+        self.next_step = start_step
+        self.uid_base = uid_base
+        self.produced = 0
+        self.taken = 0
+        self.stalls = 0                 # pump calls stopped by a full queue
+
+    # ---------------- producer side -------------------------------- #
+    @property
+    def dry(self) -> bool:
+        """Production budget spent (queue may still hold requests)."""
+        return self.n_requests is not None and \
+            self.produced >= self.n_requests
+
+    @property
+    def exhausted(self) -> bool:
+        return self.dry and self.queue.empty
+
+    def pump(self) -> int:
+        """Produce requests until the queue is full or the stream is
+        dry. Returns how many were produced; a stop due to a full
+        queue is counted as a stall (the backpressure event)."""
+        made = 0
+        while not self.dry:
+            if self.queue.full:
+                self.stalls += 1
+                break
+            items = np.asarray(self.pipeline.batch(self.next_step),
+                               np.float32)
+            self.queue.offer(ItemRequest(
+                uid=self.uid_base + self.produced, items=items))
+            self.next_step += 1
+            self.produced += 1
+            made += 1
+        return made
+
+    # ---------------- consumer side -------------------------------- #
+    def peek(self) -> Optional[ItemRequest]:
+        return self.queue.peek()
+
+    def take(self) -> Optional[ItemRequest]:
+        req = self.queue.poll()
+        if req is not None:
+            self.taken += 1
+        return req

@@ -26,6 +26,21 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_auto_mesh(shape, axes)
 
 
+def make_fleet_mesh(n_chips: Optional[int] = None):
+    """1-D device mesh for a served chip fleet: one simulated chip per
+    device on a ``"chip"`` axis (data-parallel replica fan-out —
+    ``repro.fleet.shard_chip`` shards the item batch over it, the
+    programmed plan rides replicated)."""
+    n = n_chips or len(jax.devices())
+    if n > len(jax.devices()):
+        raise ValueError(f"make_fleet_mesh: {n} chips requested but "
+                         f"only {len(jax.devices())} devices visible "
+                         f"(set XLA_FLAGS="
+                         f"--xla_force_host_platform_device_count "
+                         f"before jax initializes to simulate more)")
+    return make_auto_mesh((n,), ("chip",))
+
+
 def make_debug_mesh(n_devices: Optional[int] = None, model: int = 2):
     """Small mesh over however many (host) devices exist — for tests."""
     n = n_devices or len(jax.devices())

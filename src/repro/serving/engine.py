@@ -48,7 +48,7 @@ class StreamingEngine(Protocol):
 
     slots: int
 
-    def submit(self, request) -> None: ...
+    def submit(self, request) -> bool: ...
 
     def step(self) -> int:
         """Admit waiting requests and advance every active lane one
@@ -66,20 +66,37 @@ class SlotScheduler:
       _step_active() -> int            one batched step over ``active``
       _done(state) -> bool             has this lane's request finished?
       _release(state)                  free lane-held resources
+      _on_finish(state)                observe a lane retiring
 
     Lane states must expose ``.slot`` and a writable ``.finished``.
+
+    ``queue_limit`` bounds the admission queue: once ``queue_limit``
+    requests are waiting, ``submit`` returns False instead of enqueuing
+    — the backpressure signal a bounded upstream source
+    (:mod:`repro.fleet.source`) needs to stop producing. The default
+    (None) keeps the historic unbounded behavior.
     """
 
-    def __init__(self, slots: int):
+    def __init__(self, slots: int, *, queue_limit: Optional[int] = None):
         self.slots = slots
+        self.queue_limit = queue_limit
         self.free: Deque[int] = deque(range(slots))
         self.active: Dict[int, Any] = {}       # slot -> state
         self.queue: Deque[Any] = deque()
         self.finished: List[Any] = []
+        self.steps = 0                  # engine steps that did work
+        self.items_emitted = 0          # Σ items over all steps
+        self.rejected = 0               # submits refused by queue_limit
 
     # ---------------- request lifecycle ---------------------------- #
-    def submit(self, request) -> None:
+    def submit(self, request) -> bool:
+        """Enqueue a request; False = queue full (admission control)."""
+        if self.queue_limit is not None and \
+                len(self.queue) >= self.queue_limit:
+            self.rejected += 1
+            return False
         self.queue.append(request)
+        return True
 
     def _admit(self) -> None:
         while self.queue and self.free:
@@ -96,13 +113,19 @@ class SlotScheduler:
             del self.active[st.slot]
             self._release(st)
             self.free.append(st.slot)
+            self._on_finish(st)
 
     # ---------------- one engine step ------------------------------ #
     def step(self) -> int:
+        """Backfill free lanes from the queue, then advance every
+        active lane one item. Returns the number of items emitted."""
         self._admit()
         if not self.active:
             return 0
-        return self._step_active()
+        emitted = self._step_active()
+        self.steps += 1
+        self.items_emitted += emitted
+        return emitted
 
     def run_until_drained(self, max_steps: int = 10_000) -> List:
         steps = 0
@@ -123,6 +146,119 @@ class SlotScheduler:
 
     def _release(self, st) -> None:
         pass
+
+    def _on_finish(self, st) -> None:
+        pass
+
+
+# --------------------------------------------------------------------- #
+# the generic item-stream engine (chips, sharded fleets, ...)
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class ItemRequest:
+    """A stream of items: (n_items, d_in) float array (a single
+    (d_in,) item is promoted to a 1-item stream)."""
+    uid: int
+    items: np.ndarray
+    t_submit: float = 0.0               # stamped by submit()
+
+
+@dataclasses.dataclass
+class ItemRequestState:
+    request: ItemRequest
+    slot: int
+    pos: int = 0                        # next item to feed
+    outputs: List[np.ndarray] = dataclasses.field(default_factory=list)
+    finished: bool = False
+    # latency accounting (perf_counter seconds / engine step indices)
+    t_admit: float = 0.0
+    t_first: float = 0.0                # first item emitted
+    t_done: float = 0.0
+    admit_step: int = 0
+    done_step: int = 0
+
+    @property
+    def result(self) -> np.ndarray:
+        """(n_items, d_out) outputs in request order."""
+        return np.stack(self.outputs) if self.outputs else \
+            np.zeros((0, 0), np.float32)
+
+    @property
+    def wait_s(self) -> float:
+        """Queueing delay: submit → admission into a lane."""
+        return self.t_admit - self.request.t_submit
+
+    @property
+    def latency_s(self) -> float:
+        """Submit → last item emitted."""
+        return self.t_done - self.request.t_submit
+
+
+class ItemStreamScheduler(SlotScheduler):
+    """Slot-scheduled streaming of item sequences through ONE batched
+    stream function per engine step.
+
+    A fixed pool of lanes, each active lane feeding the payload one
+    item per step (the paper's fixed-rate streaming discipline, §V.C),
+    all lanes evaluated in a single ``_stream_batch`` call. Free lanes
+    are padded with zeros so every step runs the one compiled
+    (slots, d_in) shape — no retracing as lanes retire. Payloads
+    implement ``_stream_batch``: the compiled chip
+    (:class:`repro.chip.ChipEngine`) and the sharded multi-chip fleet
+    (:class:`repro.fleet.FleetRouter`) both plug in here.
+    """
+
+    def __init__(self, d_in: int, *, slots: int = 4,
+                 queue_limit: Optional[int] = None):
+        super().__init__(slots, queue_limit=queue_limit)
+        self.d_in = d_in
+        self._batch = np.zeros((slots, d_in), np.float32)
+
+    def _stream_batch(self, batch: np.ndarray) -> np.ndarray:
+        """(slots, d_in) → (slots, d_out), one batched payload step."""
+        raise NotImplementedError
+
+    # ---------------- scheduler hooks ------------------------------ #
+    def submit(self, request: ItemRequest) -> bool:
+        if not request.t_submit:
+            request.t_submit = time.perf_counter()
+        return super().submit(request)
+
+    def _begin(self, req: ItemRequest, slot: int) -> ItemRequestState:
+        items = np.asarray(req.items, np.float32)
+        if items.ndim == 1:
+            items = items[None, :]
+        if items.shape[-1] != self.d_in:
+            raise ValueError(f"request {req.uid}: items have "
+                             f"{items.shape[-1]} features, engine "
+                             f"streams {self.d_in}")
+        req.items = items
+        return ItemRequestState(req, slot,
+                                t_admit=time.perf_counter(),
+                                admit_step=self.steps)
+
+    def _done(self, st: ItemRequestState) -> bool:
+        return st.pos >= st.request.items.shape[0]
+
+    def _on_finish(self, st: ItemRequestState) -> None:
+        st.t_done = time.perf_counter()
+        st.done_step = self.steps
+
+    def _step_active(self) -> int:
+        self._batch[:] = 0.0
+        for slot, st in self.active.items():
+            self._batch[slot] = st.request.items[st.pos]
+        out = np.asarray(self._stream_batch(self._batch))
+        now = time.perf_counter()
+        emitted = 0
+        for slot, st in list(self.active.items()):
+            st.outputs.append(out[slot])
+            if st.pos == 0:
+                st.t_first = now
+            st.pos += 1
+            emitted += 1
+            self._maybe_finish(st)
+        return emitted
 
 
 # --------------------------------------------------------------------- #

@@ -20,7 +20,8 @@ try:
 except ImportError:         # property tests skip; parametrized cases run
     HAVE_HYPOTHESIS = False
 
-from repro.chip import ChipRequest, CompiledChip, compile_chip
+from repro.chip import (ChipRateWarning, ChipRequest, CompiledChip,
+                        compile_chip)
 from repro.configs.paper_apps import APPS
 from repro.core.costmodel import specialized_cost
 from repro.core.crossbar_layer import (MLPSpec, mlp_init, program_mlp,
@@ -169,6 +170,23 @@ def test_chip_is_jitable_pytree():
     assert len(traces) == 1
 
 
+@pytest.mark.parametrize("system", ["memristor", "digital"])
+def test_stream_use_kernel_interpret_matches_jnp_path(system):
+    """chip.stream(use_kernel=True) runs the fused Pallas kernels (CPU
+    interpret mode here) per row chunk; it must agree with the jnp
+    tile-grid path on both systems."""
+    spec = MLPSpec((200, 50, 10), activation="sigmoid",
+                   out_activation="linear")
+    params = mlp_init(jax.random.PRNGKey(21), spec)
+    chip = compile_chip(spec, params=params, system=system)
+    x = jax.random.uniform(jax.random.PRNGKey(22), (8, 200),
+                           minval=-1, maxval=1)
+    y_k = chip.stream(x, use_kernel=True)
+    y_j = chip.stream(x, use_kernel=False)
+    assert y_k.shape == (8, 10)
+    assert _rel(y_k, y_j) <= 1e-5
+
+
 def test_analytic_chip_streams_nothing_but_reports():
     chip = compile_chip((1, (784, 200, 100, 10)))
     with pytest.raises(ValueError, match="analytic-only"):
@@ -277,3 +295,82 @@ def test_serve_rejects_analytic_chip():
     chip = compile_chip((1, (8, 4)))
     with pytest.raises(ValueError, match="analytic-only"):
         chip.serve()
+
+
+def test_serve_backfills_ragged_arrivals_without_starvation():
+    """Ragged mid-stream arrivals must backfill freed lanes while a
+    long-running stream stays resident: the long request never starves
+    the shorts, the shorts never evict the long one, and every freed
+    lane is reused within one step."""
+    spec = MLPSpec((30, 16, 4), activation="threshold",
+                   out_activation="linear")
+    params = mlp_init(jax.random.PRNGKey(23), spec)
+    chip = compile_chip(spec, params=params)
+    eng = chip.serve(slots=2)
+    rng = np.random.default_rng(24)
+    long = ChipRequest(uid=0, items=rng.uniform(-1, 1, (20, 30)))
+    eng.submit(long)
+    eng.step()                          # long resident, one lane free
+    # ragged arrivals while the long stream is mid-flight
+    shorts = [ChipRequest(uid=1 + i,
+                          items=rng.uniform(-1, 1, (2 + i % 3, 30)))
+              for i in range(5)]
+    for r in shorts:
+        eng.submit(r)
+    while len(eng.finished) < len(shorts):
+        had_waiting = bool(eng.queue)
+        emitted = eng.step()
+        assert emitted > 0
+        # a step that began with work waiting must stream a FULL lane
+        # set: freed lanes are backfilled before streaming, never idled
+        if had_waiting:
+            assert emitted == eng.slots
+    # all shorts retired while the long request is STILL streaming
+    assert {st.request.uid for st in eng.finished} == \
+        {r.uid for r in shorts}
+    assert 0 in {st.request.uid for st in eng.active.values()}
+    done = eng.run_until_drained()
+    assert len(done) == 6
+    for st in done:
+        want = np.asarray(chip.stream(jnp.asarray(st.request.items,
+                                                  jnp.float32)))
+        np.testing.assert_allclose(st.result, want, atol=1e-5)
+    # per-request accounting survived the churn
+    for st in done:
+        assert st.result.shape[0] == st.request.items.shape[0]
+        assert st.t_done >= st.t_admit >= st.request.t_submit
+
+
+# -------------------- compile-time rate validation -------------------- #
+def test_rate_validation_feasible_is_silent():
+    """A routable target rate must compile without ChipRateWarning."""
+    import warnings as w
+
+    spec = MLPSpec((784, 200, 100, 10), activation="threshold",
+                   out_activation="linear")
+    params = mlp_init(jax.random.PRNGKey(25), spec)
+    with w.catch_warnings():
+        w.simplefilter("error", ChipRateWarning)
+        chip = compile_chip(spec, params=params,
+                            items_per_second=1e4)
+    assert chip.items_per_second == 1e4
+
+
+def test_rate_validation_infeasible_warns_and_strict_raises():
+    """The deep app's compute capacity exceeds its routed TDM limit, so
+    a rate that drives every replica at compute capacity is un-routable:
+    compile warns by default and raises under strict_rate."""
+    import warnings as w
+
+    spec = MLPSpec((784, 200, 100, 10), activation="threshold",
+                   out_activation="linear")
+    params = mlp_init(jax.random.PRNGKey(25), spec)
+    probe = compile_chip(spec, params=params)
+    cap = probe.mapping.items_per_second_capacity
+    limit = probe.route.max_items_per_second
+    assert cap > limit                # precondition for infeasibility
+    with pytest.warns(ChipRateWarning, match="infeasible"):
+        compile_chip(spec, params=params, items_per_second=cap)
+    with pytest.raises(ValueError, match="TDM"):
+        compile_chip(spec, params=params, items_per_second=cap,
+                     strict_rate=True)
