@@ -29,7 +29,6 @@ same as part of the full suite).
 import json
 import os
 import subprocess
-import sys
 import textwrap
 import time
 
@@ -37,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.launch import simdev
 from repro.core.crossbar_layer import (MLPSpec, crossbar_apply,
                                        mlp_apply, mlp_init,
                                        program_layer, program_mlp,
@@ -258,21 +258,15 @@ FLEET_DEVICES = 4
 # Runs in a subprocess for the same reason benchmarks/run.py seeds
 # dry-run cells in one: XLA's host-platform device count must be pinned
 # before jax initializes, which is impossible here (this module already
-# imported jax). One subprocess hosts FLEET_DEVICES simulated devices
-# and serves the same request load through the continuous-batching
-# router at fleet sizes 1 and FLEET_DEVICES. The measured win is lanes
-# per engine step: the simulated devices share one CPU, so this is the
-# batching/scheduling scaling of the fleet fabric (items/step grows
-# with fleet size at near-constant step latency), not real-FLOPs
-# scaling — on distinct hardware the same code scales compute too.
+# imported jax) — repro.launch.simdev owns that env recipe. One
+# subprocess hosts FLEET_DEVICES simulated devices and serves the same
+# request load through the continuous-batching router at fleet sizes 1
+# and FLEET_DEVICES. The measured win is lanes per engine step: the
+# simulated devices share one CPU, so this is the batching/scheduling
+# scaling of the fleet fabric (items/step grows with fleet size at
+# near-constant step latency), not real-FLOPs scaling — on distinct
+# hardware the same code scales compute too.
 _FLEET_SCRIPT = textwrap.dedent("""
-    import os
-    # force the host platform: the device-count flag only multiplies
-    # CPU devices, so with an accelerator visible the simulated fleet
-    # would never exist
-    os.environ.setdefault("JAX_PLATFORMS", "cpu")
-    os.environ["XLA_FLAGS"] = (
-        "--xla_force_host_platform_device_count=%d")
     import json, time
     import jax, jax.numpy as jnp
     import numpy as np
@@ -333,20 +327,10 @@ _FLEET_SCRIPT = textwrap.dedent("""
 def _fleet_serve() -> dict:
     print(f"\n== fleet_serve: continuous-batching router, 1 vs "
           f"{FLEET_DEVICES} simulated devices ==")
-    script = _FLEET_SCRIPT % ((FLEET_DEVICES, MLP_DIMS) +
-                              (FLEET_DEVICES,) * 4)
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src" + (os.pathsep + env["PYTHONPATH"]
-                                 if env.get("PYTHONPATH") else "")
-    env.pop("XLA_FLAGS", None)
-    # the device-count flag only multiplies CPU devices: an inherited
-    # JAX_PLATFORMS pointing at an accelerator would leave the
-    # subprocess with one device and no fleet to measure
-    env["JAX_PLATFORMS"] = "cpu"
+    script = _FLEET_SCRIPT % ((MLP_DIMS,) + (FLEET_DEVICES,) * 4)
     try:
-        out = subprocess.run([sys.executable, "-c", script],
-                             capture_output=True, text=True, env=env,
-                             cwd=REPO_ROOT, timeout=900)
+        out = simdev.run_simulated(script, n_devices=FLEET_DEVICES,
+                                   timeout=900)
     except (OSError, subprocess.TimeoutExpired) as e:
         print(f"  fleet_serve subprocess failed: {e!r}")
         return {"error": repr(e), "scaling": 0.0}
@@ -354,7 +338,7 @@ def _fleet_serve() -> dict:
         print(f"  fleet_serve subprocess failed:\n{out.stderr[-2000:]}")
         return {"error": out.stderr[-2000:], "scaling": 0.0}
     try:
-        res = json.loads(out.stdout.strip().splitlines()[-1])
+        res = simdev.last_json_line(out.stdout)
     except (IndexError, ValueError) as e:
         print(f"  fleet_serve emitted no result: {e!r}")
         return {"error": f"unparseable output: {out.stdout[-500:]!r}",

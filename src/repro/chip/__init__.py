@@ -11,11 +11,12 @@ Self-check:  PYTHONPATH=src python -m repro.chip --selftest
 """
 from repro.chip.compile import (ChipRateWarning, CompiledChip,
                                 StreamLayer, compile_app, compile_chip,
-                                stream_pipeline)
+                                stream_pipeline, validate_stream_rate)
 from repro.chip.report import ChipReport, chip_report
 from repro.chip.serving import ChipEngine, ChipRequest, ChipRequestState
 
 __all__ = ["ChipRateWarning", "CompiledChip", "StreamLayer",
            "compile_app", "compile_chip", "stream_pipeline",
+           "validate_stream_rate",
            "ChipReport", "chip_report",
            "ChipEngine", "ChipRequest", "ChipRequestState"]

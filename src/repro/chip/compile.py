@@ -337,31 +337,54 @@ class ChipRateWarning(UserWarning):
     TDM link schedule can sustain."""
 
 
-def _validate_rate(items_per_second: float, mapping,
-                   route: routing_lib.RouteReport,
-                   strict: bool) -> None:
+def validate_stream_rate(items_per_second: float, replicas: int,
+                         route: routing_lib.RouteReport,
+                         strict: bool, *,
+                         context: str = "compile_chip",
+                         fabric: str = "replica(s)",
+                         remedy: str = ("Use a larger core geometry "
+                                        "(fewer row chunks -> less mesh "
+                                        "traffic), lower the target "
+                                        "rate, or split the load across "
+                                        "chips (repro.fleet)."),
+                         stacklevel: int = 3) -> None:
     """items_per_second sizes the replica fan-out against COMPUTE
     capacity (§V.C), but each replica's mesh is also a static TDM
     network whose busiest link forwards LINK_BITS per cycle — a rate a
     replica's cores could hit may still be un-routable. Validate the
-    per-replica rate against the routed schedule at compile time."""
+    per-replica rate against the routed schedule.
+
+    ``replicas`` is however many identical copies of the routed fabric
+    share the load: ``mapping.replication`` at compile time, and
+    ``replication × n_chips`` when ``repro.fleet.shard_chip`` fans the
+    same compiled plan across a device mesh (the fleet-level
+    re-validation — a chip-feasible rate times a fleet does not need
+    checking, but a fleet-level target divided across the chips does).
+    """
     if not items_per_second:
         return
-    per_replica = items_per_second / mapping.replication
+    per_replica = items_per_second / replicas
     limit = route.max_items_per_second
     if per_replica <= limit * (1.0 + 1e-9):
         return
-    msg = (f"compile_chip: items_per_second={items_per_second:g} is "
+    msg = (f"{context}: items_per_second={items_per_second:g} is "
            f"infeasible on the routed fabric: each of the "
-           f"{mapping.replication} replica(s) must stream "
+           f"{replicas} {fabric} must stream "
            f"{per_replica:g} items/s, but the busiest mesh link's TDM "
            f"frame is {route.schedule_cycles} cycles/item, capping a "
-           f"replica at {limit:g} items/s. Use a larger core geometry "
-           f"(fewer row chunks -> less mesh traffic), lower the target "
-           f"rate, or split the load across chips (repro.fleet).")
+           f"replica at {limit:g} items/s. {remedy}")
     if strict:
         raise ValueError(msg)
-    warnings.warn(msg, ChipRateWarning, stacklevel=3)
+    warnings.warn(msg, ChipRateWarning, stacklevel=stacklevel)
+
+
+def _validate_rate(items_per_second: float, mapping,
+                   route: routing_lib.RouteReport,
+                   strict: bool) -> None:
+    # point the warning at compile_chip's caller: stacklevel counts
+    # validate_stream_rate(1) → here(2) → compile_chip(3) → user(4)
+    validate_stream_rate(items_per_second, mapping.replication, route,
+                         strict, stacklevel=4)
 
 
 def _spec_dims(prog: ProgrammedMLP) -> Tuple[int, ...]:

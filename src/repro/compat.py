@@ -15,6 +15,36 @@ try:  # jax >= 0.6 top-level export
 except AttributeError:  # 0.4.x line
     from jax.experimental.shard_map import shard_map  # noqa: F401
 
+# present on every supported jax (added 0.4.27; the repo floor is
+# 0.4.35) — re-exported so fleet code imports every sharding shim from
+# one place, and so a future rename has one seam to patch
+make_array_from_process_local_data = \
+    jax.make_array_from_process_local_data
+
+
+def enable_cpu_collectives(implementation: str = "gloo") -> bool:
+    """Opt the CPU client into cross-process collectives (gloo TCP).
+
+    The CPU backend refuses multi-process computations outright
+    ("Multiprocess computations aren't implemented on the CPU
+    backend") unless the client is built with a collectives
+    implementation, which must be configured BEFORE the backend
+    initializes — call this before ``jax.distributed.initialize``.
+    Returns False (instead of raising) on jax builds that lack the
+    option, so callers can degrade to single-process behavior.
+    """
+    try:
+        jax.config.update("jax_cpu_collectives_implementation",
+                          implementation)
+        return True
+    except (AttributeError, ValueError):
+        return False
+
+
+def multiprocess_initialized() -> bool:
+    """True when this process is one rank of a jax.distributed job."""
+    return jax.process_count() > 1
+
 
 def cost_analysis_dict(compiled) -> dict:
     """``Compiled.cost_analysis()`` returns one dict on current jax but

@@ -9,7 +9,13 @@ One :func:`repro.chip.compile_chip` result, served as a fleet:
   print(fleet.report(router))              # hardware + served roll-up
 
 Self-check:  PYTHONPATH=src python -m repro.fleet --selftest
-(runs itself on 2 simulated host devices).
+(runs itself on 2 simulated host devices). The multi-process fabric
+has its own: ``python -m repro.fleet --distributed-selftest``
+self-spawns N localhost ``jax.distributed`` ranks (gloo collectives),
+checks ``ShardedChip.stream_local`` == single-chip at rel 0.0, drives
+the lockstep ``DistributedFleetRouter`` off per-host
+``StreamSource.for_host`` feeders, and rolls router stats up across
+hosts.
 
 Submodule imports are lazy (PEP 562) so importing ``repro.fleet`` —
 and in particular ``python -m repro.fleet`` booting this package —
@@ -23,9 +29,12 @@ import importlib
 _EXPORTS = {
     "ShardedChip": "repro.fleet.shard",
     "shard_chip": "repro.fleet.shard",
+    "replicate_to_mesh": "repro.fleet.shard",
     "FleetRouter": "repro.fleet.router",
+    "DistributedFleetRouter": "repro.fleet.router",
     "FleetRequest": "repro.fleet.router",
     "RouterStats": "repro.fleet.router",
+    "merge_stats": "repro.fleet.router",
     "BoundedQueue": "repro.fleet.source",
     "StreamSource": "repro.fleet.source",
     "FleetReport": "repro.fleet.report",

@@ -1,18 +1,34 @@
-"""CI smoke entry point:  PYTHONPATH=src python -m repro.fleet --selftest
+"""CI smoke entry points.
 
-Runs itself on simulated host devices (default 2; ``--devices N``): the
-flag is pinned into XLA_FLAGS before jax initializes, which is why
-``repro.fleet``'s package imports are lazy. Checks that the sharded
-fleet stream is bit-identical to the single chip across ≥2 devices,
-that the continuous-batching router backfills ragged traffic and its
-outputs match the direct stream, that the sensor-stream frontend
-respects backpressure, that the fleet report composes the per-chip
-accounting, and that compile-time rate validation fires. Exit code 0
-iff all checks pass.
+``PYTHONPATH=src python -m repro.fleet --selftest`` — single-process,
+simulated host devices (default 2; ``--devices N``): the flag is pinned
+into XLA_FLAGS before jax initializes, which is why ``repro.fleet``'s
+package imports are lazy. Checks that the sharded fleet stream is
+bit-identical to the single chip across ≥2 devices, that the
+continuous-batching router backfills ragged traffic and its outputs
+match the direct stream, that the sensor-stream frontend respects
+backpressure, that the fleet report composes the per-chip accounting,
+and that compile-time rate validation fires.
+
+``PYTHONPATH=src python -m repro.fleet --distributed-selftest`` — the
+multi-PROCESS fabric: self-spawns N localhost worker processes
+(default 2, ``--processes``), each a real ``jax.distributed`` rank
+with its own simulated CPU devices (``--chips-per-process``) and gloo
+cross-process collectives. Every worker checks, against a locally
+recomputed single-chip reference (everything is a pure function of
+(seed, step), so no reference data crosses hosts): the distributed
+``stream_local`` equals the single-chip stream at rel 0.0 on its row
+block; the lockstep :class:`DistributedFleetRouter` drains per-host
+sensor feeders and its outputs match the direct stream; and the
+``stats_global`` roll-up accounts for every host's requests, items and
+lanes. The parent supervises the workers (any death kills the rest)
+and exits 0 iff every rank passed.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 import os
 import sys
 
@@ -147,6 +163,191 @@ def selftest(verbose: bool = True) -> bool:
     return ok
 
 
+def distributed_worker(verbose: bool = True) -> int:
+    """One rank of the localhost distributed selftest (spawned by
+    :func:`run_distributed_selftest` with the rendezvous in
+    ``REPRO_DIST_*`` env vars). Prints one JSON result line; exit code
+    0 iff EVERY rank's checks passed (the verdict is allgathered, so
+    all ranks agree)."""
+    rank = int(os.environ["REPRO_DIST_RANK"])
+    nprocs = int(os.environ["REPRO_DIST_NPROCS"])
+    port = int(os.environ["REPRO_DIST_PORT"])
+    # test hook for the worker-death suite: die before touching jax,
+    # leaving the peers blocked in distributed initialize — exactly the
+    # hang the launcher's supervision must clean up
+    if os.environ.get("REPRO_FLEET_CRASH_RANK") == str(rank):
+        print(json.dumps({"rank": rank, "ok": False,
+                          "crashed": "injected"}), flush=True)
+        return 3
+
+    from repro.compat import enable_cpu_collectives
+    if not enable_cpu_collectives():
+        print(json.dumps({"rank": rank, "ok": False,
+                          "error": "no CPU collectives on this jax"}),
+              flush=True)
+        return 1
+    import jax
+
+    jax.distributed.initialize(coordinator_address=f"127.0.0.1:{port}",
+                               num_processes=nprocs, process_id=rank)
+
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.chip import compile_chip
+    from repro.core.crossbar_layer import MLPSpec, mlp_init
+    from repro.data.pipeline import SensorPipeline
+    from repro.fleet import StreamSource, shard_chip
+    from repro.launch.mesh import make_distributed_fleet_mesh
+
+    ok = True
+    out = {"rank": rank, "processes": jax.process_count()}
+
+    def check(name, cond):
+        nonlocal ok
+        ok = ok and bool(cond)
+        if verbose:
+            print(f"  [rank {rank}] [{'ok' if cond else 'FAIL'}] "
+                  f"{name}", flush=True)
+
+    check("distributed runtime spans the processes",
+          jax.process_count() == nprocs and
+          jax.process_index() == rank)
+
+    mesh = make_distributed_fleet_mesh()
+    n_local = jax.local_device_count()
+    check("fleet mesh covers every process's chips",
+          mesh.devices.size == nprocs * n_local)
+
+    # the compile is a pure function of the seed, so every rank
+    # programs an identical chip — fleet programming moves no bytes
+    dims = (784, 200, 100, 10)
+    spec = MLPSpec(dims, activation="threshold",
+                   out_activation="linear")
+    params = mlp_init(jax.random.PRNGKey(0), spec)
+    chip = compile_chip(spec, params=params, system="memristor")
+    fleet = shard_chip(chip, mesh=mesh)
+    check("fleet is distributed",
+          fleet.is_distributed and fleet.n_chips == mesh.devices.size
+          and fleet.n_local_chips == n_local)
+
+    # distributed stream == single chip, rel 0.0: the global batch is
+    # a pure function of its seed, so this rank recomputes it, streams
+    # its own row block through the fabric, and checks against a
+    # locally evaluated single-chip reference — no data crosses hosts
+    rows_per_chip = 3
+    B = rows_per_chip * fleet.n_chips
+    x_global = np.asarray(jax.random.uniform(
+        jax.random.PRNGKey(1), (B, dims[0]), minval=0, maxval=1))
+    per_proc = rows_per_chip * n_local
+    lo = rank * per_proc
+    x_local = x_global[lo:lo + per_proc]
+    y_local = fleet.stream_local(x_local)
+    with jax.default_device(jax.local_devices()[0]):
+        ref = np.asarray(chip.stream(jnp.asarray(x_global)))
+    rel = float(np.max(np.abs(y_local - ref[lo:lo + per_proc])) /
+                max(np.max(np.abs(ref)), 1e-12))
+    out["rel"] = rel
+    check("distributed stream == single-chip stream (rel 0.0)",
+          rel == 0.0)
+
+    # lockstep router over per-host sensor feeders: rank h streams
+    # frames h, h+H, h+2H, … of ONE logical sensor stream
+    n_req = 6
+    pipe = SensorPipeline(window=28, stride=18, frames_per_step=1)
+    src = StreamSource.for_host(pipe, n_requests=n_req, capacity=3)
+    router = fleet.serve(lanes_per_chip=2, queue_limit=4)
+    done = router.serve(src)
+    out["drained"] = len(done)
+    check("per-host feeder drains through the lockstep router",
+          len(done) == n_req and src.exhausted)
+    with jax.default_device(jax.local_devices()[0]):
+        served_ok = all(
+            np.allclose(st.result,
+                        np.asarray(chip.stream(
+                            jnp.asarray(st.request.items))),
+                        atol=1e-5) for st in done)
+    check("routed outputs match the direct stream", served_ok)
+    check("latency accounting is monotonic",
+          all(st.request.t_submit <= st.t_admit <= st.t_first
+              <= st.t_done for st in done))
+
+    local_stats = router.stats()
+    global_stats = router.stats_global()
+    out["stats_local"] = dataclasses.asdict(local_stats)
+    out["stats_global"] = dataclasses.asdict(global_stats)
+    items_per_host = n_req * pipe.items_per_step
+    check("stats_global rolls up every host",
+          global_stats.requests == n_req * nprocs and
+          global_stats.items == items_per_host * nprocs and
+          global_stats.lanes == 2 * fleet.n_chips and
+          global_stats.steps >= local_stats.steps)
+
+    # fleet.report(router) must fold the CROSS-HOST served stats into
+    # the fleet-wide hardware envelope (collective, like every verb)
+    rep = fleet.report(router)
+    check("fleet report serves the global roll-up",
+          rep.n_chips == fleet.n_chips and
+          rep.served is not None and
+          rep.served.items == items_per_host * nprocs and
+          rep.served_fraction_of_capacity is not None)
+
+    # every rank reports the fleet-wide verdict (and the same one)
+    from jax.experimental import multihost_utils
+    verdicts = np.asarray(multihost_utils.process_allgather(
+        np.asarray([1 if ok else 0], np.int32)))
+    all_ok = bool(verdicts.sum() == nprocs)
+    out["ok"] = all_ok
+    if verbose:
+        print(f"  [rank {rank}] worker: "
+              f"{'PASS' if all_ok else 'FAIL'}", flush=True)
+    print(json.dumps(out), flush=True)   # JSON verdict last, by contract
+    jax.distributed.shutdown()
+    return 0 if all_ok else 1
+
+
+def run_distributed_selftest(processes: int = 2,
+                             chips_per_process: int = 2,
+                             verbose: bool = True,
+                             timeout: float = 600.0) -> bool:
+    """Parent of the distributed selftest: spawn one
+    ``--distributed-worker`` per rank on localhost (supervised — a dead
+    worker takes the fleet down instead of hanging it), then aggregate
+    the per-rank JSON verdicts. Prints a final JSON summary line."""
+    from repro.launch.simdev import last_json_line, launch_local_fleet
+
+    argv = [sys.executable, "-m", "repro.fleet", "--distributed-worker"]
+    results = launch_local_fleet(argv, processes,
+                                 devices_per_process=chips_per_process,
+                                 timeout=timeout)
+    workers = []
+    ok = True
+    for r in results:
+        if verbose:
+            for line in r.stdout.strip().splitlines():
+                print(f"    {line}")
+        try:
+            workers.append(last_json_line(r.stdout))
+        except (ValueError, json.JSONDecodeError):
+            workers.append({"rank": r.rank, "ok": False,
+                            "error": (r.stderr[-800:] or "no output")})
+        ok = ok and r.returncode == 0 and \
+            bool(workers[-1].get("ok", False))
+        if r.returncode != 0 and verbose:
+            print(f"  worker {r.rank}: exit {r.returncode}"
+                  f"{' (terminated by supervisor)' if r.killed else ''}")
+            if r.stderr.strip():
+                print("    " + "\n    ".join(
+                    r.stderr.strip().splitlines()[-8:]))
+    summary = {"pass": bool(ok), "processes": processes,
+               "chips_per_process": chips_per_process,
+               "workers": workers}
+    print(json.dumps(summary), flush=True)
+    if verbose:
+        print(f"distributed selftest: {'PASS' if ok else 'FAIL'}")
+    return ok
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.fleet")
     ap.add_argument("--selftest", action="store_true",
@@ -155,7 +356,26 @@ def main(argv=None) -> int:
                     help="simulated host devices (default 2; ignored "
                          "when jax is already initialized or XLA_FLAGS "
                          "is set)")
+    ap.add_argument("--distributed-selftest", action="store_true",
+                    help="self-spawn a localhost jax.distributed fleet "
+                         "and check the multi-process fabric")
+    ap.add_argument("--processes", type=int, default=2,
+                    help="worker processes for --distributed-selftest")
+    ap.add_argument("--chips-per-process", type=int, default=2,
+                    help="simulated chips (devices) per worker process")
+    ap.add_argument("--distributed-worker", action="store_true",
+                    help=argparse.SUPPRESS)   # spawned, not typed
     args = ap.parse_args(argv)
+    if args.distributed_worker:
+        if "jax" not in sys.modules and "XLA_FLAGS" not in os.environ:
+            os.environ["XLA_FLAGS"] = (
+                "--xla_force_host_platform_device_count="
+                + os.environ.get("REPRO_DIST_DEVICES", "1"))
+            os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        return distributed_worker()
+    if args.distributed_selftest:
+        return 0 if run_distributed_selftest(
+            args.processes, args.chips_per_process) else 1
     if not args.selftest:
         ap.print_help()
         return 2

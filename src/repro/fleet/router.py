@@ -13,12 +13,23 @@ backpressure, and per-request latency accounting
 sensor-stream frontend (:mod:`repro.fleet.source`) pumps windowed items
 under backpressure while the router streams the active set — continuous
 traffic, not a pre-staged burst.
+
+:class:`DistributedFleetRouter` is the multi-process shape of the same
+contract. On a ``jax.distributed`` fleet no single host can address the
+other hosts' chips, so the router runs SPMD: every process owns the
+lanes of ITS chips (``lanes_per_chip × n_local_chips``), feeds them
+from its own (seed, step)-pure source, and joins the one global batched
+step per engine step in lockstep — including empty steps
+(``step_when_idle``), because the step is a collective the other ranks
+may still need. Host 0 is where the roll-up lands: ``stats_global()``
+gathers every host's counters and raw latencies and returns the exact
+fleet-wide :class:`RouterStats`.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -43,6 +54,7 @@ class RouterStats:
     latency_s_p50: float
     latency_s_p95: float
     rejected: int                       # submits refused (queue full)
+    lanes: int = 0                      # slots behind these numbers
 
     def __str__(self) -> str:
         return (f"RouterStats[{self.requests} req / {self.items} items "
@@ -53,6 +65,48 @@ class RouterStats:
                 f"{self.latency_s_p95 * 1e3:.1f} ms]")
 
 
+def merge_stats(stats: Sequence[RouterStats]) -> RouterStats:
+    """Pure (no-communication) roll-up of per-host RouterStats.
+
+    Counters (requests, items, rejected) add exactly; lanes add (the
+    fleet's lanes are the hosts' disjoint lanes); steps and wall take
+    the max (lockstep hosts step together, stragglers dominate wall);
+    throughput is total items over the longest wall; occupancy is
+    recomputed from the summed per-host lane-step products; latency
+    means are request-weighted. Percentiles CANNOT be merged from
+    percentiles — here they take the max across hosts (a conservative
+    upper bound, exact when one host dominates). When the raw
+    latencies are reachable, prefer
+    :meth:`DistributedFleetRouter.stats_global`, which gathers them
+    and is exact.
+    """
+    if not stats:
+        return RouterStats(0, 0, 0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0,
+                           0, 0)
+    requests = sum(s.requests for s in stats)
+    items = sum(s.items for s in stats)
+    wall = max(s.wall_s for s in stats)
+    lane_steps = sum(s.steps * s.lanes for s in stats)
+    w = [s.requests for s in stats]
+    wsum = sum(w) or 1
+    return RouterStats(
+        requests=requests,
+        items=items,
+        steps=max(s.steps for s in stats),
+        wall_s=wall,
+        items_per_second=items / wall if wall else 0.0,
+        occupancy=items / lane_steps if lane_steps else 0.0,
+        wait_s_mean=sum(s.wait_s_mean * n
+                        for s, n in zip(stats, w)) / wsum,
+        latency_s_mean=sum(s.latency_s_mean * n
+                           for s, n in zip(stats, w)) / wsum,
+        latency_s_p50=max(s.latency_s_p50 for s in stats),
+        latency_s_p95=max(s.latency_s_p95 for s in stats),
+        rejected=sum(s.rejected for s in stats),
+        lanes=sum(s.lanes for s in stats),
+    )
+
+
 class FleetRouter(ItemStreamScheduler):
     """StreamingEngine over a :class:`repro.fleet.ShardedChip` (or any
     payload with ``.stream(batch)`` and ``.d_in`` — a bare
@@ -60,24 +114,39 @@ class FleetRouter(ItemStreamScheduler):
 
     def __init__(self, fleet, *, lanes_per_chip: int = 4,
                  use_kernel: bool = False,
-                 queue_limit: Optional[int] = None):
+                 queue_limit: Optional[int] = None,
+                 step_when_idle: bool = False):
         # a bare CompiledChip compiled without weights has plan=None
         # (ShardedChip already rejects those at shard time)
         if getattr(fleet, "plan", 1) is None:
             raise ValueError("FleetRouter needs a streamable chip "
                              "(compiled with weights); this one is "
                              "analytic-only")
+        if getattr(fleet, "is_distributed", False) and \
+                not isinstance(self, DistributedFleetRouter):
+            raise ValueError(
+                "this fleet's mesh spans processes; one host cannot "
+                "route for chips it cannot address — use "
+                "DistributedFleetRouter (every process runs one, in "
+                "lockstep, over its local lanes)")
         n_chips = getattr(fleet, "n_chips", 1)
         super().__init__(fleet.d_in if hasattr(fleet, "d_in")
                          else fleet.dims[0],
-                         slots=lanes_per_chip * n_chips,
-                         queue_limit=queue_limit)
+                         slots=lanes_per_chip * self._lane_chips(fleet),
+                         queue_limit=queue_limit,
+                         step_when_idle=step_when_idle)
         self.fleet = fleet
         self.n_chips = n_chips
         self.lanes_per_chip = lanes_per_chip
         self.use_kernel = use_kernel
         self._t_start: Optional[float] = None
         self._t_last: float = 0.0
+
+    @staticmethod
+    def _lane_chips(fleet) -> int:
+        """How many chips this router schedules lanes for — all of
+        them here; only the local ones in the distributed variant."""
+        return getattr(fleet, "n_chips", 1)
 
     # ---------------- payload ------------------------------------- #
     def _stream_batch(self, batch: np.ndarray) -> np.ndarray:
@@ -107,15 +176,17 @@ class FleetRouter(ItemStreamScheduler):
         (it stops when full — backpressure), admit as many waiting
         requests as this router's admission queue accepts (a rejected
         request stays queued at the source, un-dropped), then run one
-        batched fleet step. Returns the finished states.
+        batched fleet step — or stop/skip, per :meth:`_serve_decision`
+        (the one point the distributed lockstep variant overrides).
+        Returns the finished states.
 
         ``max_steps`` bounds loop ITERATIONS, not just engine steps, so
         the loop terminates even if admission never makes progress.
         """
         if self.queue_limit is not None and self.queue_limit < 1:
             raise ValueError(
-                "FleetRouter.serve() needs queue_limit >= 1: a "
-                "zero-capacity admission queue can never admit a "
+                f"{type(self).__name__}.serve() needs queue_limit >= "
+                "1: a zero-capacity admission queue can never admit a "
                 "request, so the serve loop could not make progress")
         for _ in range(max_steps):
             source.pump()
@@ -124,24 +195,41 @@ class FleetRouter(ItemStreamScheduler):
                 if req is None or not self.submit(req):
                     break
                 source.take()
-            if not (self.queue or self.active):
-                if source.exhausted:
-                    break
-                source.pump()
-                if source.peek() is None:
-                    break               # source dry and nothing queued
-                continue
-            self.step()
+            decision = self._serve_decision(source)
+            if decision == "stop":
+                break
+            if decision == "step":
+                self.step()
         return self.finished
 
+    def _serve_decision(self, source) -> str:
+        """After pump+admit: ``"step"`` to run one engine step,
+        ``"skip"`` to loop again without stepping, ``"stop"`` to end
+        the serve loop."""
+        if self.queue or self.active:
+            return "step"
+        if source.exhausted:
+            return "stop"
+        source.pump()
+        if source.peek() is None:
+            return "stop"               # source dry and nothing queued
+        return "skip"
+
     # ---------------- accounting ----------------------------------- #
-    def stats(self) -> RouterStats:
+    def _latency_arrays(self):
         lat = np.asarray([st.latency_s for st in self.finished]) \
             if self.finished else np.zeros((0,))
         wait = np.asarray([st.wait_s for st in self.finished]) \
             if self.finished else np.zeros((0,))
-        wall = (self._t_last - self._t_start) \
+        return lat, wait
+
+    def _wall_s(self) -> float:
+        return (self._t_last - self._t_start) \
             if self._t_start is not None else 0.0
+
+    def stats(self) -> RouterStats:
+        lat, wait = self._latency_arrays()
+        wall = self._wall_s()
         return RouterStats(
             requests=len(self.finished),
             items=self.items_emitted,
@@ -157,4 +245,159 @@ class FleetRouter(ItemStreamScheduler):
             latency_s_p95=float(np.percentile(lat, 95))
             if lat.size else 0.0,
             rejected=self.rejected,
+            lanes=self.slots,
+        )
+
+
+class DistributedFleetRouter(FleetRouter):
+    """The router's SPMD shape for a fleet whose mesh spans processes.
+
+    EVERY process of the ``jax.distributed`` job constructs one of
+    these over the same :class:`ShardedChip` and drives it with the
+    same call sequence (lockstep — the batched step is a collective).
+    Each process schedules only its local chips' lanes and feeds them
+    from its own source; request payloads and results never leave the
+    host that owns them. The cross-host surface is exactly two things:
+    the per-step item rows entering the mesh computation, and the tiny
+    control/stat reductions (:meth:`_any_across_hosts`,
+    :meth:`stats_global`).
+
+    Lockstep obligations the base class cannot see are handled here:
+    ``step_when_idle`` is forced on (an idle rank must still enter the
+    collective), and the drain/serve loops replace their local
+    "anything left?" tests with an all-hosts reduction so every rank
+    executes the same number of steps and breaks on the same
+    iteration.
+    """
+
+    def __init__(self, fleet, *, lanes_per_chip: int = 4,
+                 use_kernel: bool = False,
+                 queue_limit: Optional[int] = None,
+                 step_when_idle: bool = True):
+        if not getattr(fleet, "is_distributed", False):
+            raise ValueError(
+                "DistributedFleetRouter needs a fleet whose mesh "
+                "spans processes (make_distributed_fleet_mesh under "
+                "jax.distributed); on one process use FleetRouter")
+        # accepted (ShardedChip.serve forwards router kwargs blindly)
+        # but not optional: a rank skipping the collective step while
+        # another rank enters it deadlocks the fleet
+        if not step_when_idle:
+            raise ValueError(
+                "DistributedFleetRouter always steps when idle: the "
+                "batched step is a collective, and a locally idle "
+                "rank that skipped it would deadlock the ranks that "
+                "still have traffic")
+        super().__init__(fleet, lanes_per_chip=lanes_per_chip,
+                         use_kernel=use_kernel, queue_limit=queue_limit,
+                         step_when_idle=True)
+
+    @staticmethod
+    def _lane_chips(fleet) -> int:
+        return fleet.n_local_chips
+
+    # ---------------- payload ------------------------------------- #
+    def _stream_batch(self, batch: np.ndarray) -> np.ndarray:
+        # (local slots, d_in) → (local slots, d_out): each rank
+        # contributes its lanes' rows and reads back its own shards
+        return self.fleet.stream_local(batch,
+                                       use_kernel=self.use_kernel)
+
+    # ---------------- lockstep control plane ----------------------- #
+    def _any_across_hosts(self, flag: bool) -> bool:
+        """OR-reduce a python bool over all hosts (one tiny gloo
+        allgather; every rank must call this together)."""
+        import jax
+
+        if jax.process_count() == 1:
+            return bool(flag)
+        from jax.experimental import multihost_utils
+        flags = multihost_utils.process_allgather(
+            np.asarray([1 if flag else 0], np.int32))
+        return bool(np.asarray(flags).sum() > 0)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List:
+        steps = 0
+        while steps < max_steps:
+            if not self._any_across_hosts(bool(self.queue or
+                                               self.active)):
+                break
+            self.step()
+            steps += 1
+        return self.finished
+
+    def _serve_decision(self, source) -> str:
+        """The fleet-wide continue/stop decision: the serve loop runs
+        until NO host has queued, active, or un-pumped traffic, so a
+        rank that drained early keeps joining the collective steps the
+        busy ranks still need. Lockstep holds because every rank
+        reduces the same flags on the same iteration — there is no
+        local "skip" path."""
+        more = bool(self.queue or self.active or
+                    not source.exhausted)
+        return "step" if self._any_across_hosts(more) else "stop"
+
+    # ---------------- fleet-wide accounting ------------------------ #
+    def stats_global(self) -> RouterStats:
+        """The exact fleet-wide roll-up, assembled on every rank (hosts
+        get identical results; host 0 is conventionally the one that
+        reports). Counters are allgathered; per-request latency/wait
+        vectors are padded to the fleet-wide max request count and
+        allgathered too, so the percentiles are computed over every
+        finished request in the fleet — not merged from per-host
+        percentiles. Collective: every rank must call together."""
+        import jax
+
+        if jax.process_count() == 1:
+            return self.stats()
+        from jax.experimental import multihost_utils
+
+        # int32/float32 on the wire: the default CPU client is x32
+        # (an int64 input would be silently downcast), and float32
+        # keeps ~0.1 µs resolution on second-scale latencies. Counters
+        # ride as (hi, lo) int32 halves so a long-lived fleet — days at
+        # the benchmarked items/s — cannot overflow the gather.
+        lat, wait = self._latency_arrays()
+        counts = np.asarray([len(self.finished), self.items_emitted,
+                             self.steps, self.rejected, self.slots],
+                            np.int64)
+        halves = np.stack([counts >> 31,
+                           counts & 0x7FFFFFFF]).astype(np.int32)
+        walls = np.asarray([self._wall_s()], np.float32)
+        halves_all = np.asarray(
+            multihost_utils.process_allgather(halves)).astype(np.int64)
+        counts_all = (halves_all[:, 0, :] << 31) | halves_all[:, 1, :]
+        walls_all = np.asarray(multihost_utils.process_allgather(walls))
+
+        n_max = int(counts_all[:, 0].max())
+        pad = np.full((2, n_max), np.nan, np.float32)
+        pad[0, :lat.size] = lat
+        pad[1, :wait.size] = wait
+        gathered = np.asarray(multihost_utils.process_allgather(pad)) \
+            if n_max else np.zeros((1, 2, 0))
+        lat_all = gathered[:, 0, :].ravel()
+        wait_all = gathered[:, 1, :].ravel()
+        lat_all = lat_all[~np.isnan(lat_all)]
+        wait_all = wait_all[~np.isnan(wait_all)]
+
+        requests = int(counts_all[:, 0].sum())
+        items = int(counts_all[:, 1].sum())
+        lane_steps = int((counts_all[:, 2] * counts_all[:, 4]).sum())
+        wall = float(walls_all.max())
+        return RouterStats(
+            requests=requests,
+            items=items,
+            steps=int(counts_all[:, 2].max()),
+            wall_s=wall,
+            items_per_second=items / wall if wall else 0.0,
+            occupancy=items / lane_steps if lane_steps else 0.0,
+            wait_s_mean=float(wait_all.mean()) if wait_all.size else 0.0,
+            latency_s_mean=float(lat_all.mean()) if lat_all.size
+            else 0.0,
+            latency_s_p50=float(np.percentile(lat_all, 50))
+            if lat_all.size else 0.0,
+            latency_s_p95=float(np.percentile(lat_all, 95))
+            if lat_all.size else 0.0,
+            rejected=int(counts_all[:, 3].sum()),
+            lanes=int(counts_all[:, 4].sum()),
         )

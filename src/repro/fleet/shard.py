@@ -11,6 +11,24 @@ exactly ``stream_pipeline`` — the same arithmetic the single chip runs
 — and the sharded stream matches ``CompiledChip.stream`` bit-for-bit
 (rel 0.0): batch rows are independent, so splitting them across devices
 cannot reassociate any reduction.
+
+The mesh may span PROCESSES: build it with
+:func:`repro.launch.mesh.make_distributed_fleet_mesh` under an
+initialized ``jax.distributed`` runtime and the same ShardedChip works
+multi-host, with two changes this module owns:
+
+  * the plan is replicated onto every *local* mesh device and assembled
+    into one global replicated array
+    (``jax.make_array_from_single_device_arrays``) — every process
+    programs its own chips from its own (identical, deterministic)
+    compile, so programming the fleet moves no bytes between hosts;
+  * scatter/gather goes through :meth:`ShardedChip.stream_local`: each
+    process contributes only ITS rows
+    (``jax.make_array_from_process_local_data``) and reads back only
+    its devices' output shards. The global-batch ``stream`` /
+    ``stream_host`` verbs refuse on a multi-process mesh — a host
+    cannot address the other hosts' devices, and pretending otherwise
+    would mean shipping every batch through host 0.
 """
 from __future__ import annotations
 
@@ -23,9 +41,37 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.chip.compile import CompiledChip, stream_pipeline
-from repro.compat import shard_map
-from repro.launch.mesh import make_fleet_mesh
+from repro.chip.compile import (CompiledChip, stream_pipeline,
+                                validate_stream_rate)
+from repro.compat import make_array_from_process_local_data, shard_map
+from repro.launch.mesh import make_fleet_mesh, mesh_spans_processes
+
+
+def replicate_to_mesh(tree, mesh: jax.sharding.Mesh):
+    """Fully replicate a pytree onto every device of ``mesh``, multi-
+    process safe.
+
+    Single-process this is plain ``device_put`` with a replicated
+    NamedSharding. Across processes ``device_put`` cannot reach
+    non-addressable devices, so each process stages the (identical)
+    host value onto its own mesh devices and the per-device buffers are
+    assembled into one global replicated array — no cross-host
+    transfer, which is what makes fleet programming O(local devices)
+    instead of O(cluster).
+    """
+    sharding = NamedSharding(mesh, P())
+    if not mesh_spans_processes(mesh):
+        return jax.device_put(tree, sharding)
+    me = jax.process_index()
+    local = [d for d in mesh.devices.flat if d.process_index == me]
+
+    def leaf(x):
+        x = np.asarray(x)
+        shards = [jax.device_put(x, d) for d in local]
+        return jax.make_array_from_single_device_arrays(
+            x.shape, sharding, shards)
+
+    return jax.tree_util.tree_map(leaf, tree)
 
 
 @dataclasses.dataclass
@@ -36,30 +82,70 @@ class ShardedChip:
     across the mesh's ``"chip"`` axis, runs the mapped dataflow on every
     device, and concatenates — semantically identical to the single
     chip, ``n_chips``× the lanes. ``serve``/``report`` mirror the
-    CompiledChip verbs at fleet scale.
+    CompiledChip verbs at fleet scale. On a multi-process mesh use
+    ``stream_local`` (and ``serve(distributed=True)``); see the module
+    docstring.
+
+    ``items_per_second`` is an optional FLEET-level target rate: the
+    compile already validated the chip's own target against its routed
+    TDM schedule, but a fleet target must be re-validated against
+    ``replication × n_chips`` fabric copies — capacity multiplies with
+    the fleet, and silently assuming so is exactly the bug this check
+    closes. Infeasible targets warn (:class:`ChipRateWarning`) or, with
+    ``strict_rate=True``, raise.
     """
     chip: CompiledChip
     mesh: jax.sharding.Mesh
     axis: str = "chip"
+    items_per_second: float = 0.0
+    strict_rate: bool = False
 
     def __post_init__(self):
         if self.chip.plan is None:
             raise ValueError(
                 "shard_chip needs a streamable chip (compiled with "
                 "weights); this one is analytic-only")
+        validate_stream_rate(
+            self.items_per_second,
+            self.chip.replication * self.mesh.devices.size,
+            self.chip.route, self.strict_rate,
+            context="shard_chip",
+            fabric=(f"fleet replica(s) ({self.mesh.devices.size} "
+                    f"chip(s) x {self.chip.replication} replica(s))"),
+            remedy=("Add chips to the fleet, use a larger core "
+                    "geometry, or lower the fleet target rate."),
+            # point the warning at shard_chip's caller: stacklevel
+            # counts validate_stream_rate(1) → __post_init__(2) →
+            # dataclass __init__(3) → shard_chip(4) → user(5)
+            stacklevel=5)
         self._fns: Dict[bool, callable] = {}
         # program the fleet ONCE: replicate the tile image onto every
         # mesh device at shard time (§III.D program-once, fleet-level).
         # Without this, every stream call would re-transfer the plan
         # from host/device-0 to the mesh — per-step programming traffic
         # that dwarfs the item traffic.
-        self._plan = jax.device_put(
-            self.chip.plan, NamedSharding(self.mesh, P()))
+        self._plan = replicate_to_mesh(self.chip.plan, self.mesh)
 
     # ------------------------------------------------------------ #
     @property
     def n_chips(self) -> int:
         return self.mesh.devices.size
+
+    @property
+    def is_distributed(self) -> bool:
+        """True when the fleet's mesh spans jax processes."""
+        return mesh_spans_processes(self.mesh)
+
+    @property
+    def local_chips(self):
+        """This process's mesh devices, in mesh (row-block) order."""
+        me = jax.process_index()
+        return [d for d in self.mesh.devices.flat
+                if d.process_index == me]
+
+    @property
+    def n_local_chips(self) -> int:
+        return len(self.local_chips)
 
     @property
     def d_in(self) -> int:
@@ -103,6 +189,13 @@ class ShardedChip:
         the host scatter/gather, i.e. the difference between the fleet
         scaling and not.
         """
+        if self.is_distributed:
+            raise ValueError(
+                "stream/stream_host need every fleet device to be "
+                "addressable from this process, but the mesh spans "
+                f"{len({d.process_index for d in self.mesh.devices.flat})} "
+                "processes. Use stream_local(x_local): every process "
+                "passes its own rows and reads back its own outputs.")
         xf = np.asarray(x, np.float32)
         lead = xf.shape[:-1]
         xf = xf.reshape(-1, xf.shape[-1])
@@ -115,6 +208,41 @@ class ShardedChip:
             xf, NamedSharding(self.mesh, P(self.axis)))
         out = np.asarray(self._fn(use_kernel)(self._plan, xs))[:B]
         return out.reshape(*lead, out.shape[-1])
+
+    def stream_local(self, x, *, use_kernel: bool = False) -> np.ndarray:
+        """Process-local scatter/gather: x (..., d_in) is THIS
+        process's rows; returns this process's (..., d_out) outputs.
+
+        Every participating process must call this together with the
+        same number of rows (SPMD — the call assembles one global array
+        via ``jax.make_array_from_process_local_data`` and enters one
+        global computation; mismatched local shapes make the ranks
+        disagree on the global shape and fail). The rows land on this
+        process's own mesh devices and only their output shards are
+        read back, so no item bytes ever cross hosts — the fleet-scale
+        analogue of the paper's sensors feeding each chip's TSV
+        interface directly.
+
+        Single-process it is equivalent to :meth:`stream_host` (one
+        process owns all rows), which keeps the tier-1 suite able to
+        pin its semantics without spawning a cluster.
+        """
+        xf = np.asarray(x, np.float32)
+        lead = xf.shape[:-1]
+        xf = xf.reshape(-1, xf.shape[-1])
+        B = xf.shape[0]
+        n_local = self.n_local_chips
+        per = math.ceil(max(B, 1) / n_local)
+        pad = per * n_local - B
+        if pad:
+            xf = np.pad(xf, ((0, pad), (0, 0)))
+        sharding = NamedSharding(self.mesh, P(self.axis))
+        xs = make_array_from_process_local_data(sharding, xf)
+        out = self._fn(use_kernel)(self._plan, xs)
+        shards = sorted(out.addressable_shards,
+                        key=lambda s: s.index[0].start or 0)
+        y = np.concatenate([np.asarray(s.data) for s in shards])[:B]
+        return y.reshape(*lead, y.shape[-1])
 
     def stream(self, x: jax.Array, *,
                use_kernel: bool = False) -> jax.Array:
@@ -131,7 +259,15 @@ class ShardedChip:
         return self.stream(x, **kw)
 
     def serve(self, *, lanes_per_chip: int = 4, **kw):
-        """A continuous-batching :class:`repro.fleet.FleetRouter`."""
+        """A continuous-batching router over this fleet: a
+        :class:`repro.fleet.FleetRouter`, or its SPMD lockstep variant
+        :class:`repro.fleet.DistributedFleetRouter` when the mesh spans
+        processes."""
+        if self.is_distributed:
+            from repro.fleet.router import DistributedFleetRouter
+            return DistributedFleetRouter(self,
+                                          lanes_per_chip=lanes_per_chip,
+                                          **kw)
         from repro.fleet.router import FleetRouter
         return FleetRouter(self, lanes_per_chip=lanes_per_chip, **kw)
 
@@ -143,13 +279,24 @@ class ShardedChip:
 
 def shard_chip(chip: CompiledChip, n_chips: Optional[int] = None, *,
                mesh: Optional[jax.sharding.Mesh] = None,
-               axis: str = "chip") -> ShardedChip:
+               axis: str = "chip",
+               items_per_second: float = 0.0,
+               strict_rate: bool = False) -> ShardedChip:
     """Fan one compiled chip out over ``n_chips`` devices (default: all
     visible). Pass an existing 1-D ``mesh`` to reuse a launcher mesh
-    instead of building a fresh one."""
+    instead of building a fresh one (including a
+    ``make_distributed_fleet_mesh`` spanning processes).
+
+    ``items_per_second`` declares the rate target for the WHOLE fleet;
+    it is validated against ``replication × n_chips`` copies of the
+    chip's routed TDM fabric (warn / ``strict_rate=True`` raise) — the
+    single-chip compile cannot have vouched for it.
+    """
     if mesh is None:
         mesh = make_fleet_mesh(n_chips)
     elif axis not in mesh.axis_names:
         raise ValueError(f"shard_chip: mesh has no {axis!r} axis "
                          f"(axes: {mesh.axis_names})")
-    return ShardedChip(chip, mesh, axis)
+    return ShardedChip(chip, mesh, axis,
+                       items_per_second=items_per_second,
+                       strict_rate=strict_rate)

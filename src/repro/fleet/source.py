@@ -66,19 +66,54 @@ class StreamSource:
     ``n_requests`` bounds the stream (None = endless); ``capacity``
     bounds the staging queue, and is the knob that trades frontend
     memory against the router's ability to backfill.
+
+    ``start_step``/``step_stride`` deal the pipeline's step axis out:
+    a source at ``(start_step=h, step_stride=H)`` produces steps
+    h, h+H, h+2H, … — how a fleet of ``H`` hosts splits ONE logical
+    sensor stream into disjoint per-host feeds (:meth:`for_host`).
+    Because a batch is a pure function of ``(seed, step)``, any host —
+    or a post-mortem — can replay any other host's exact feed from the
+    two integers, which is what makes the distributed stream checkable
+    against the single-chip stream without moving data between hosts.
     """
 
     def __init__(self, pipeline, *, n_requests: Optional[int] = 16,
                  capacity: int = 8, start_step: int = 0,
-                 uid_base: int = 0):
+                 step_stride: int = 1, uid_base: int = 0):
+        if step_stride < 1:
+            raise ValueError("StreamSource: step_stride must be >= 1")
         self.pipeline = pipeline
         self.n_requests = n_requests
         self.queue = BoundedQueue(capacity)
         self.next_step = start_step
+        self.step_stride = step_stride
         self.uid_base = uid_base
         self.produced = 0
         self.taken = 0
         self.stalls = 0                 # pump calls stopped by a full queue
+
+    @classmethod
+    def for_host(cls, pipeline, *, host: Optional[int] = None,
+                 hosts: Optional[int] = None,
+                 n_requests: Optional[int] = 16, capacity: int = 8,
+                 uid_stride: int = 1_000_000) -> "StreamSource":
+        """This host's share of one logical stream: host ``h`` of ``H``
+        takes pipeline steps h, h+H, h+2H, … and uids starting at
+        ``h × uid_stride`` (globally unique without coordination).
+        ``host``/``hosts`` default to the jax process topology, so
+        under ``jax.distributed`` every rank constructing
+        ``StreamSource.for_host(pipe)`` gets a disjoint, exactly
+        replayable feed."""
+        if host is None or hosts is None:
+            import jax
+            host = jax.process_index() if host is None else host
+            hosts = jax.process_count() if hosts is None else hosts
+        if not 0 <= host < hosts:
+            raise ValueError(f"StreamSource.for_host: host {host} not "
+                             f"in [0, {hosts})")
+        return cls(pipeline, n_requests=n_requests, capacity=capacity,
+                   start_step=host, step_stride=hosts,
+                   uid_base=host * uid_stride)
 
     # ---------------- producer side -------------------------------- #
     @property
@@ -104,7 +139,7 @@ class StreamSource:
                                np.float32)
             self.queue.offer(ItemRequest(
                 uid=self.uid_base + self.produced, items=items))
-            self.next_step += 1
+            self.next_step += self.step_stride
             self.produced += 1
             made += 1
         return made

@@ -41,6 +41,49 @@ def make_fleet_mesh(n_chips: Optional[int] = None):
     return make_auto_mesh((n,), ("chip",))
 
 
+def make_distributed_fleet_mesh(chips_per_process: Optional[int] = None):
+    """1-D ``"chip"`` mesh spanning every process of a
+    ``jax.distributed``-initialized job (process-major device order, so
+    each process's chips hold a contiguous row-block of a
+    ``P("chip")``-sharded batch — the layout
+    :meth:`repro.fleet.ShardedChip.stream_local` scatters into).
+
+    Every process contributes the same number of chips
+    (``chips_per_process``, default: all of its local devices): SPMD
+    computations over the mesh need every rank to participate, and a
+    rank with zero mesh devices could never join the collective. On a
+    single process this degrades to :func:`make_fleet_mesh` semantics.
+    """
+    import numpy as np
+
+    by_proc: Dict[int, list] = {}
+    for d in jax.devices():
+        by_proc.setdefault(d.process_index, []).append(d)
+    # derive the per-process count from the GLOBAL device list (the
+    # same on every rank) — using this rank's local count would build
+    # rank-divergent meshes on heterogeneous hosts, which surfaces as
+    # a shape mismatch or hang in the first collective, not an error
+    min_local = min(len(ds) for ds in by_proc.values())
+    per = min_local if chips_per_process is None else chips_per_process
+    if not 1 <= per <= min_local:
+        counts = {p: len(ds) for p, ds in sorted(by_proc.items())}
+        raise ValueError(
+            f"make_distributed_fleet_mesh: {per} chips per process "
+            f"requested but the smallest process has {min_local} "
+            f"local devices (per-process device counts: {counts}); "
+            f"every process must contribute the same number of chips")
+    devs = [d for p in sorted(by_proc)
+            for d in sorted(by_proc[p], key=lambda d: d.id)[:per]]
+    return jax.sharding.Mesh(np.asarray(devs), ("chip",))
+
+
+def mesh_spans_processes(mesh) -> bool:
+    """True when the mesh's devices live in more than one process —
+    the signal that host scatter/gather must go through the
+    process-local path instead of plain device_put."""
+    return len({d.process_index for d in mesh.devices.flat}) > 1
+
+
 def make_debug_mesh(n_devices: Optional[int] = None, model: int = 2):
     """Small mesh over however many (host) devices exist — for tests."""
     n = n_devices or len(jax.devices())

@@ -1,0 +1,194 @@
+"""Simulated-device and localhost-distributed subprocess plumbing.
+
+Two launch regimes share one constraint: XLA's host-platform device
+count (and, for real multi-process runs, the coordinator address) must
+be pinned into the environment *before* jax initializes — impossible
+in a process that already imported jax. Everything that needs a
+simulated fleet therefore runs in a subprocess, and until now each
+call site (``tests/test_fleet.py``, ``benchmarks/kernel_bench.py``)
+re-derived the same env boilerplate by hand. This module is the one
+place that knows the recipe:
+
+  * :func:`simulated_device_env` — env dict for ONE subprocess hosting
+    ``n_devices`` simulated CPU devices (the flag only multiplies CPU
+    devices, so ``JAX_PLATFORMS`` is forced to ``cpu``; ``PYTHONPATH``
+    gains this tree's ``src`` so the child can import ``repro`` from
+    any cwd).
+  * :func:`run_simulated` — run a python script string under that env.
+  * :func:`launch_local_fleet` — spawn one worker subprocess per rank
+    for a ``jax.distributed`` localhost fleet and babysit them: the
+    moment ANY worker dies, the survivors are terminated (a worker
+    blocked in ``jax.distributed.initialize`` waiting for a dead peer
+    would otherwise hang until the coordination-service timeout).
+
+No jax import at module level: the whole point is manipulating the
+environment of processes that have not initialized jax yet.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+from typing import Dict, List, Optional, Sequence
+
+# the directory holding the ``repro`` package (…/src) — children get it
+# on PYTHONPATH so scripts run from any cwd
+SRC_DIR = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+REPO_ROOT = os.path.dirname(SRC_DIR)
+
+
+def simulated_device_env(n_devices: int,
+                         base_env: Optional[Dict[str, str]] = None,
+                         extra: Optional[Dict[str, str]] = None
+                         ) -> Dict[str, str]:
+    """Environment for a subprocess that must see ``n_devices``
+    simulated host devices. Any inherited XLA_FLAGS is replaced (a
+    stale device count would win over ours), and the platform is
+    forced to CPU: the device-count flag only multiplies CPU devices,
+    so with an accelerator visible the simulated fleet would never
+    exist."""
+    env = dict(os.environ if base_env is None else base_env)
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                        f"{int(n_devices)}")
+    env["JAX_PLATFORMS"] = "cpu"
+    path = env.get("PYTHONPATH", "")
+    if SRC_DIR not in path.split(os.pathsep):
+        env["PYTHONPATH"] = SRC_DIR + (os.pathsep + path if path else "")
+    if extra:
+        env.update(extra)
+    return env
+
+
+def run_simulated(script: str, *, n_devices: int = 2,
+                  timeout: float = 600.0,
+                  extra_env: Optional[Dict[str, str]] = None
+                  ) -> subprocess.CompletedProcess:
+    """Run a python ``script`` string in a subprocess with
+    ``n_devices`` simulated CPU devices. Returns the CompletedProcess;
+    callers usually feed ``stdout`` to :func:`last_json_line`."""
+    return subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        env=simulated_device_env(n_devices, extra=extra_env),
+        cwd=REPO_ROOT, timeout=timeout)
+
+
+def last_json_line(stdout: str) -> dict:
+    """Parse the last JSON line of a subprocess's stdout — the
+    convention every subprocess here uses to report results past its
+    own chatter (scans backwards, so trailing log lines don't break
+    the contract)."""
+    lines = [ln for ln in stdout.strip().splitlines() if ln.strip()]
+    for ln in reversed(lines):
+        if ln.lstrip().startswith("{"):
+            return json.loads(ln)
+    raise ValueError("subprocess emitted no JSON result line")
+
+
+def pick_free_port() -> int:
+    """A free localhost TCP port for the jax.distributed coordinator."""
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+@dataclasses.dataclass
+class WorkerResult:
+    rank: int
+    returncode: int
+    stdout: str
+    stderr: str
+    killed: bool = False          # terminated because a peer died
+
+
+def launch_local_fleet(argv: Sequence[str], n_processes: int, *,
+                       devices_per_process: int = 1,
+                       coordinator_port: Optional[int] = None,
+                       timeout: float = 600.0,
+                       extra_env: Optional[Dict[str, str]] = None,
+                       poll_s: float = 0.2) -> List[WorkerResult]:
+    """Spawn ``n_processes`` localhost workers for a jax.distributed
+    fleet and supervise them to completion.
+
+    Each worker runs ``argv`` (e.g. ``[sys.executable, "-m",
+    "repro.fleet", "--distributed-worker"]``) with the rendezvous
+    exported through the environment::
+
+        REPRO_DIST_RANK / REPRO_DIST_NPROCS / REPRO_DIST_PORT
+        REPRO_DIST_DEVICES   (simulated devices per process)
+
+    Supervision is the clean-shutdown contract the tests pin: if any
+    worker exits non-zero — or the deadline passes — every survivor is
+    terminated immediately instead of being left blocked on a
+    collective (or on ``jax.distributed.initialize``) that can never
+    complete. Worker stdout/stderr are staged in temp files, never
+    pipes, so a chatty worker cannot deadlock the supervisor.
+    """
+    port = coordinator_port or pick_free_port()
+    procs: List[subprocess.Popen] = []
+    outs, errs = [], []
+    results: List[Optional[WorkerResult]] = [None] * n_processes
+    try:
+        for rank in range(n_processes):
+            env = simulated_device_env(devices_per_process,
+                                       extra=extra_env)
+            env.update({
+                "REPRO_DIST_RANK": str(rank),
+                "REPRO_DIST_NPROCS": str(n_processes),
+                "REPRO_DIST_PORT": str(port),
+                "REPRO_DIST_DEVICES": str(devices_per_process),
+            })
+            out = tempfile.TemporaryFile(mode="w+t")
+            err = tempfile.TemporaryFile(mode="w+t")
+            outs.append(out)
+            errs.append(err)
+            procs.append(subprocess.Popen(
+                list(argv), stdout=out, stderr=err, text=True, env=env,
+                cwd=REPO_ROOT))
+
+        deadline = time.monotonic() + timeout
+        failed = False
+        while True:
+            codes = [p.poll() for p in procs]
+            if all(c is not None for c in codes):
+                break
+            if any(c is not None and c != 0 for c in codes) or \
+                    time.monotonic() > deadline:
+                failed = True
+                break
+            time.sleep(poll_s)
+
+        killed = [False] * n_processes
+        if failed:
+            for i, p in enumerate(procs):
+                if p.poll() is None:
+                    killed[i] = True
+                    p.terminate()
+            grace = time.monotonic() + 10.0
+            for p in procs:
+                while p.poll() is None and time.monotonic() < grace:
+                    time.sleep(poll_s)
+                if p.poll() is None:
+                    p.kill()
+                    p.wait()
+
+        for rank, p in enumerate(procs):
+            outs[rank].seek(0)
+            errs[rank].seek(0)
+            results[rank] = WorkerResult(
+                rank=rank, returncode=p.returncode,
+                stdout=outs[rank].read(), stderr=errs[rank].read(),
+                killed=killed[rank])
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+                p.wait()
+        for f in outs + errs:
+            f.close()
+    return results  # type: ignore[return-value]

@@ -75,11 +75,21 @@ class SlotScheduler:
     — the backpressure signal a bounded upstream source
     (:mod:`repro.fleet.source`) needs to stop producing. The default
     (None) keeps the historic unbounded behavior.
+
+    ``step_when_idle`` makes ``step()`` run ``_step_active`` even with
+    no active lane. A single-process engine never wants this (an idle
+    step is wasted work), but an SPMD engine whose step is a collective
+    over a multi-process fleet (:class:`repro.fleet.DistributedFleetRouter`)
+    MUST enter the batched computation on every rank in lockstep — a
+    locally idle rank that skipped it would deadlock the ranks that
+    still have traffic.
     """
 
-    def __init__(self, slots: int, *, queue_limit: Optional[int] = None):
+    def __init__(self, slots: int, *, queue_limit: Optional[int] = None,
+                 step_when_idle: bool = False):
         self.slots = slots
         self.queue_limit = queue_limit
+        self.step_when_idle = step_when_idle
         self.free: Deque[int] = deque(range(slots))
         self.active: Dict[int, Any] = {}       # slot -> state
         self.queue: Deque[Any] = deque()
@@ -120,7 +130,7 @@ class SlotScheduler:
         """Backfill free lanes from the queue, then advance every
         active lane one item. Returns the number of items emitted."""
         self._admit()
-        if not self.active:
+        if not self.active and not self.step_when_idle:
             return 0
         emitted = self._step_active()
         self.steps += 1
@@ -209,8 +219,10 @@ class ItemStreamScheduler(SlotScheduler):
     """
 
     def __init__(self, d_in: int, *, slots: int = 4,
-                 queue_limit: Optional[int] = None):
-        super().__init__(slots, queue_limit=queue_limit)
+                 queue_limit: Optional[int] = None,
+                 step_when_idle: bool = False):
+        super().__init__(slots, queue_limit=queue_limit,
+                         step_when_idle=step_when_idle)
         self.d_in = d_in
         self._batch = np.zeros((slots, d_in), np.float32)
 

@@ -5,25 +5,21 @@ must already be exact and serve correctly); the ≥2-device sharding
 equality runs in a subprocess so XLA's host-device count can be pinned
 before jax initializes (same pattern as test_elastic).
 """
-import json
-import os
-import subprocess
-import sys
 import textwrap
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.chip import compile_chip
+from repro.chip import ChipRateWarning, compile_chip
 from repro.core.crossbar_layer import MLPSpec, mlp_init
 from repro.data.pipeline import SensorPipeline
-from repro.fleet import (BoundedQueue, FleetRouter, StreamSource,
+from repro.fleet import (BoundedQueue, DistributedFleetRouter,
+                         FleetRouter, StreamSource, merge_stats,
                          shard_chip)
 from repro.serving.engine import ItemRequest
-
-REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 @pytest.fixture(scope="module")
@@ -64,15 +60,12 @@ def test_fleet_requires_visible_devices(chip):
         shard_chip(chip, len(jax.devices()) + 1)
 
 
-def test_sharded_stream_matches_single_chip_across_devices():
+def test_sharded_stream_matches_single_chip_across_devices(
+        sim_subprocess):
     """The acceptance bar: ≥2 simulated devices, rel 0.0 vs the
-    single-chip stream. Subprocess: the device count must be pinned
-    before jax initializes."""
+    single-chip stream. Subprocess (via the shared conftest fixture):
+    the device count must be pinned before jax initializes."""
     script = textwrap.dedent("""
-        import os
-        os.environ.setdefault("JAX_PLATFORMS", "cpu")
-        os.environ["XLA_FLAGS"] = \
-            "--xla_force_host_platform_device_count=2"
         import json
         import jax, jax.numpy as jnp
         from repro.chip import compile_chip
@@ -88,6 +81,11 @@ def test_sharded_stream_matches_single_chip_across_devices():
         fleet = shard_chip(chip)
         x = jax.random.uniform(jax.random.PRNGKey(1), (11, 784))
         rel = float(jnp.max(jnp.abs(fleet.stream(x) - chip.stream(x))))
+        # the process-local scatter/gather must agree with the
+        # host-global path on one process (its multi-process semantics
+        # are pinned by the distributed suite)
+        local_same = bool(np.array_equal(fleet.stream_local(np.asarray(x)),
+                                         fleet.stream_host(np.asarray(x))))
         # routed serving must match the direct stream too
         router = FleetRouter(fleet, lanes_per_chip=2)
         rng = np.random.default_rng(0)
@@ -102,20 +100,14 @@ def test_sharded_stream_matches_single_chip_across_devices():
                             jnp.asarray(st.request.items))), atol=1e-5)
             for st in done)
         print(json.dumps({"devices": len(jax.devices()), "rel": rel,
-                          "drained": len(done),
+                          "drained": len(done), "local_same": local_same,
                           "served_ok": served_ok}))
     """)
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
-    env.pop("XLA_FLAGS", None)
-    out = subprocess.run([sys.executable, "-c", script],
-                         capture_output=True, text=True, env=env,
-                         cwd=REPO_ROOT, timeout=600)
-    assert out.returncode == 0, out.stderr[-3000:]
-    res = json.loads(out.stdout.strip().splitlines()[-1])
+    res = sim_subprocess(script, n_devices=2)
     assert res["devices"] == 2
     assert res["rel"] == 0.0          # exact, not approximately equal
     assert res["drained"] == 5 and res["served_ok"]
+    assert res["local_same"]
 
 
 # -------------------- router ------------------------------------------ #
@@ -248,6 +240,113 @@ def test_router_serve_loop_end_to_end(chip):
     for st in done:
         want = np.asarray(chip.stream(jnp.asarray(st.request.items)))
         np.testing.assert_allclose(st.result, want, atol=1e-5)
+
+
+# -------------------- multi-process surfaces, 1-process semantics ----- #
+def test_stream_local_matches_stream_host(chip):
+    """On one process the process-local scatter/gather is the whole
+    scatter/gather; ragged batches included (padding happens against
+    the LOCAL chip count)."""
+    fleet = shard_chip(chip, 1)
+    for b in (1, 3, 8):
+        x = np.random.default_rng(b).uniform(-1, 1, (b, 64)) \
+            .astype(np.float32)
+        np.testing.assert_array_equal(fleet.stream_local(x),
+                                      fleet.stream_host(x))
+    assert fleet.n_local_chips == fleet.n_chips == 1
+    assert not fleet.is_distributed
+
+
+def test_distributed_router_requires_distributed_fleet(chip):
+    with pytest.raises(ValueError, match="spans processes"):
+        DistributedFleetRouter(shard_chip(chip, 1))
+
+
+def test_stream_source_for_host_partitions_the_stream(chip):
+    """Host h of H takes pipeline steps h, h+H, …: the per-host feeds
+    are disjoint, cover the stream, and replay exactly (purity)."""
+    pipe = SensorPipeline(window=8, stride=8, height=16, width=16)
+    hosts = 3
+    feeds = {}
+    for h in range(hosts):
+        src = StreamSource.for_host(pipe, host=h, hosts=hosts,
+                                    n_requests=4, capacity=8)
+        src.pump()
+        reqs = [src.take() for _ in range(4)]
+        feeds[h] = reqs
+        # uids are globally unique without coordination
+        assert [r.uid for r in reqs] == [h * 1_000_000 + i
+                                         for i in range(4)]
+    for h, reqs in feeds.items():
+        for i, r in enumerate(reqs):
+            step = h + i * hosts            # the step this host drew
+            np.testing.assert_array_equal(
+                r.items, np.asarray(pipe.batch(step), np.float32))
+    with pytest.raises(ValueError, match="host"):
+        StreamSource.for_host(pipe, host=3, hosts=3)
+    with pytest.raises(ValueError, match="step_stride"):
+        StreamSource(pipe, step_stride=0)
+
+
+def test_router_step_when_idle_keeps_stepping(chip):
+    """The SPMD lockstep hook: an idle engine still runs the batched
+    step (zero rows) so a multi-process collective can't deadlock on a
+    locally drained rank."""
+    fleet = shard_chip(chip, 1)
+    router = FleetRouter(fleet, lanes_per_chip=2, step_when_idle=True)
+    assert router.step() == 0 and router.steps == 1   # idle, but ran
+    router.submit(ItemRequest(
+        uid=0, items=np.random.default_rng(0).uniform(0, 1, (2, 64))))
+    router.run_until_drained()
+    idle = FleetRouter(fleet, lanes_per_chip=2)       # default: skip
+    assert idle.step() == 0 and idle.steps == 0
+
+
+def test_merge_stats_rolls_up_counters(chip):
+    fleet = shard_chip(chip, 1)
+    rng = np.random.default_rng(7)
+
+    def run_router(n_req):
+        router = FleetRouter(fleet, lanes_per_chip=2)
+        for i in range(n_req):
+            router.submit(ItemRequest(uid=i,
+                                      items=rng.uniform(0, 1, (2, 64))))
+        router.run_until_drained()
+        return router.stats()
+
+    a, b = run_router(2), run_router(3)
+    m = merge_stats([a, b])
+    assert m.requests == 5 and m.items == 10
+    assert m.lanes == a.lanes + b.lanes
+    assert m.steps == max(a.steps, b.steps)
+    assert m.wall_s == max(a.wall_s, b.wall_s)
+    assert m.rejected == 0
+    assert m.latency_s_p95 == max(a.latency_s_p95, b.latency_s_p95)
+    assert m.items_per_second == pytest.approx(10 / m.wall_s)
+    # single-host merge keeps the counters (percentiles by definition)
+    one = merge_stats([a])
+    assert (one.requests, one.items, one.lanes) == \
+        (a.requests, a.items, a.lanes)
+    empty = merge_stats([])
+    assert empty.requests == 0 and empty.items == 0
+
+
+def test_fleet_level_rate_validation(chip):
+    """compile-time validation vouches for ONE chip; the fleet target
+    must be re-validated against replication × n_chips fabric copies
+    (the capacity the fleet actually multiplies)."""
+    per_chip = chip.route.max_items_per_second * chip.replication
+    # a fleet-feasible target is silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", ChipRateWarning)
+        shard_chip(chip, 1, items_per_second=0.9 * per_chip)
+    # an infeasible fleet target warns ...
+    with pytest.warns(ChipRateWarning, match="shard_chip.*infeasible"):
+        shard_chip(chip, 1, items_per_second=1e3 * per_chip)
+    # ... and raises under strict_rate
+    with pytest.raises(ValueError, match="infeasible"):
+        shard_chip(chip, 1, items_per_second=1e3 * per_chip,
+                   strict_rate=True)
 
 
 # -------------------- fleet report ------------------------------------ #

@@ -1,0 +1,148 @@
+"""Golden regression: Tables II–VI / fleet_report numbers, pinned.
+
+The costmodel has two consumers that must NEVER drift silently: the
+paper-reproduction benchmarks (``benchmarks/tables2to6_apps.py``
+already cross-checks ``chip.report()`` against ``specialized_cost``)
+and the fleet-report roll-up served to operators. This suite pins the
+actual NUMBERS — every paper app × {1t1m, digital} chip report, the
+RISC baselines, and the linear fleet roll-up at 3 chips — to a
+committed JSON fixture at 1e-9 relative tolerance, so a costmodel
+refactor that changes any table value must regenerate the fixture in
+the same diff (a reviewable event, not a silent drift).
+
+Regenerate after an INTENDED accounting change:
+
+    PYTHONPATH=src python tests/test_golden_tables.py --regen
+"""
+import dataclasses
+import json
+import os
+import sys
+import types
+
+import pytest
+
+from repro.chip import compile_app
+from repro.configs.paper_apps import APPS
+from repro.core.costmodel import risc_cost
+from repro.fleet import fleet_report
+
+GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "golden", "fleet_tables.json")
+SYSTEMS = ("1t1m", "digital")
+FLEET_CHIPS = 3
+RTOL = 1e-9
+
+
+def _jsonable(value):
+    if dataclasses.is_dataclass(value) and not isinstance(value, type):
+        value = dataclasses.asdict(value)
+    if isinstance(value, dict):
+        return {k: _jsonable(v) for k, v in value.items()
+                if k not in ("mapping", "route")}   # report objects
+    if isinstance(value, (list, tuple)):
+        return [_jsonable(v) for v in value]
+    return value
+
+
+def compute_tables() -> dict:
+    """Every number the fixture pins, from the live code paths."""
+    out = {}
+    for app_id, app in APPS.items():
+        row = {"risc": _jsonable(risc_cost(app))}
+        for system in SYSTEMS:
+            chip = compile_app(app, system)
+            row[system] = _jsonable(chip.report().to_dict())
+            # the analytic fleet roll-up (a fleet of N identical chips
+            # needs no devices to account for — duck-typed member)
+            fleet = types.SimpleNamespace(chip=chip,
+                                          n_chips=FLEET_CHIPS)
+            row[f"{system}_fleet{FLEET_CHIPS}"] = _jsonable(
+                fleet_report(fleet))
+        out[app_id] = row
+    return out
+
+
+def _assert_close(got, want, path=""):
+    if isinstance(want, dict):
+        assert isinstance(got, dict) and set(got) == set(want), \
+            f"{path}: keys {sorted(got)} != {sorted(want)}"
+        for k in want:
+            _assert_close(got[k], want[k], f"{path}.{k}")
+    elif isinstance(want, list):
+        assert len(got) == len(want), f"{path}: length"
+        for i, (g, w) in enumerate(zip(got, want)):
+            _assert_close(g, w, f"{path}[{i}]")
+    elif isinstance(want, float) and not isinstance(want, bool):
+        assert got == pytest.approx(want, rel=RTOL, abs=1e-12), \
+            f"{path}: {got!r} != {want!r} (rel {RTOL})"
+    else:
+        assert got == want, f"{path}: {got!r} != {want!r}"
+
+
+@pytest.fixture(scope="module")
+def golden():
+    assert os.path.exists(GOLDEN_PATH), \
+        (f"missing {GOLDEN_PATH} — generate it with "
+         f"PYTHONPATH=src python tests/test_golden_tables.py --regen")
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def live():
+    return compute_tables()
+
+
+def test_golden_covers_every_app_and_system(golden):
+    assert set(golden) == set(APPS)
+    for app_id, row in golden.items():
+        assert set(row) == {"risc", *SYSTEMS,
+                            *(f"{s}_fleet{FLEET_CHIPS}"
+                              for s in SYSTEMS)}
+
+
+@pytest.mark.parametrize("app_id", sorted(APPS))
+def test_tables_match_golden(golden, live, app_id):
+    _assert_close(live[app_id], golden[app_id], path=app_id)
+
+
+def test_fleet_rollup_is_linear_in_chips(live):
+    """Belt and braces alongside the pins: the committed fleet numbers
+    really are the chip numbers × N (catches a fixture regenerated
+    against a broken roll-up)."""
+    for app_id, row in live.items():
+        for system in SYSTEMS:
+            chip_rep = row[system]
+            fleet_rep = row[f"{system}_fleet{FLEET_CHIPS}"]
+            assert fleet_rep["n_chips"] == FLEET_CHIPS
+            for chip_key, fleet_key in (("cores", "cores"),
+                                        ("area_mm2", "area_mm2"),
+                                        ("power_mw", "power_mw")):
+                assert fleet_rep[fleet_key] == pytest.approx(
+                    chip_rep[chip_key] * FLEET_CHIPS, rel=RTOL), \
+                    f"{app_id}/{system}: {fleet_key}"
+            assert fleet_rep["energy_per_item_nj"] == pytest.approx(
+                chip_rep["energy_per_item_nj"], rel=RTOL)
+            assert fleet_rep["capacity_items_per_second"] == \
+                pytest.approx(chip_rep["capacity_items_per_second"] *
+                              chip_rep["replication"] * FLEET_CHIPS,
+                              rel=RTOL)
+
+
+def _regen():
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    tables = compute_tables()
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(tables, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {GOLDEN_PATH} "
+          f"({len(tables)} apps x {len(SYSTEMS)} systems)")
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        print(__doc__)
+        sys.exit(2)
