@@ -324,6 +324,159 @@ _FLEET_SCRIPT = textwrap.dedent("""
 """)
 
 
+# --------------------------------------------------------------------- #
+# multi-app deployment throughput: 2 paper apps co-resident on 4 chips
+# --------------------------------------------------------------------- #
+# Subprocess for the same simulated-device reason as _fleet_serve. Three
+# configurations share interleaved rounds on the same bursts:
+#   legacy        — compile_chip → shard_chip → FleetRouter (the PR-3/4
+#                   path, the committed fleet_serve baseline's shape)
+#   deploy_single — the SAME single app through repro.deploy (gate: the
+#                   declarative surface must not tax the single-app
+#                   case — this ratio is the no-regression check)
+#   deploy_duo    — deep + ocr co-resident on the one 4-chip mesh,
+#                   per-app lanes, mixed traffic; reported per-app AND
+#                   aggregate items/s
+_DEPLOY_SCRIPT = textwrap.dedent("""
+    import json, time
+    import jax
+    import numpy as np
+    from repro.chip import compile_chip
+    from repro.core.crossbar_layer import MLPSpec, mlp_init
+    from repro.deploy import AppSpec, DeploymentSpec, deploy
+    from repro.fleet import FleetRouter, shard_chip
+    from repro.serving.engine import ItemRequest
+
+    DEEP = %r
+    OCR = (2500, 60, 26)       # the paper's OCR app topology
+    LANES = 8
+    N_REQ = 120                # >> total lanes: stays saturated
+    ROUNDS = 6
+
+    spec_deep = MLPSpec(DEEP, activation="threshold",
+                        out_activation="linear")
+    spec_ocr = MLPSpec(OCR, activation="threshold",
+                       out_activation="linear")
+    p_deep = mlp_init(jax.random.PRNGKey(0), spec_deep)
+    p_ocr = mlp_init(jax.random.PRNGKey(1), spec_ocr)
+    rng = np.random.default_rng(0)
+    bursts_deep = [[rng.uniform(0, 1, (6 + i %% 5, DEEP[0]))
+                    .astype(np.float32) for i in range(N_REQ)]
+                   for _ in range(ROUNDS)]
+    bursts_ocr = [[rng.uniform(0, 1, (6 + i %% 5, OCR[0]))
+                   .astype(np.float32) for i in range(N_REQ // 2)]
+                  for _ in range(ROUNDS)]
+
+    chip = compile_chip(spec_deep, params=p_deep)
+    fleet = shard_chip(chip, 4)
+
+    def legacy_round(burst):
+        router = FleetRouter(fleet, lanes_per_chip=LANES)
+        for i, items in enumerate(burst):
+            router.submit(ItemRequest(uid=i, items=items))
+        t0 = time.perf_counter()
+        router.run_until_drained()
+        return router.items_emitted / (time.perf_counter() - t0)
+
+    d_single = deploy(AppSpec("deep", spec_deep, params=p_deep,
+                              lanes_per_chip=LANES), n_chips=4)
+
+    def single_round(burst):
+        for items in burst:
+            d_single.submit("deep", items)
+        n0 = d_single.router.items_emitted
+        t0 = time.perf_counter()
+        d_single.run_until_drained()
+        return (d_single.router.items_emitted - n0) / \
+            (time.perf_counter() - t0)
+
+    d_duo = deploy(DeploymentSpec(apps=(
+        AppSpec("deep", spec_deep, params=p_deep,
+                lanes_per_chip=LANES // 2),
+        AppSpec("ocr", spec_ocr, params=p_ocr,
+                lanes_per_chip=LANES // 2),
+    ), n_chips=4))
+
+    def duo_round(burst_deep, burst_ocr):
+        for items in burst_deep:
+            d_duo.submit("deep", items)
+        for items in burst_ocr:
+            d_duo.submit("ocr", items)
+        base = {k: v for k, v in d_duo.router.items_by_key.items()}
+        n0 = d_duo.router.items_emitted
+        t0 = time.perf_counter()
+        d_duo.run_until_drained()
+        dt = time.perf_counter() - t0
+        per_app = {k: (v - base[k]) / dt
+                   for k, v in d_duo.router.items_by_key.items()}
+        return (d_duo.router.items_emitted - n0) / dt, per_app
+
+    # warm every jitted step shape once
+    legacy_round(bursts_deep[0][:2])
+    single_round(bursts_deep[0][:2])
+    duo_round(bursts_deep[0][:2], bursts_ocr[0][:2])
+
+    rounds = {"legacy": [], "deploy_single": [], "deploy_duo": [],
+              "duo_deep": [], "duo_ocr": []}
+    for burst_d, burst_o in zip(bursts_deep, bursts_ocr):
+        rounds["legacy"].append(legacy_round(burst_d))
+        rounds["deploy_single"].append(single_round(burst_d))
+        agg, per_app = duo_round(burst_d, burst_o)
+        rounds["deploy_duo"].append(agg)
+        rounds["duo_deep"].append(per_app["deep"])
+        rounds["duo_ocr"].append(per_app["ocr"])
+
+    stats = d_duo.stats()
+    legacy, single = max(rounds["legacy"]), max(rounds["deploy_single"])
+    print(json.dumps({
+        "devices": 4, "lanes": LANES, "requests": N_REQ,
+        "items_per_s_legacy": legacy,
+        "items_per_s_deploy_single": single,
+        "single_vs_legacy": single / legacy,
+        "items_per_s_deploy_duo": max(rounds["deploy_duo"]),
+        "items_per_s_duo_deep": max(rounds["duo_deep"]),
+        "items_per_s_duo_ocr": max(rounds["duo_ocr"]),
+        "rounds": rounds,
+        "stats_exact": (
+            sum(a.items for a in stats.apps.values()) ==
+            stats.fleet.items and
+            sum(a.requests for a in stats.apps.values()) ==
+            stats.fleet.requests),
+    }))
+""")
+
+
+def _deploy_serve() -> dict:
+    print("\n== deploy_serve: 2 paper apps co-resident on 4 simulated "
+          "chips ==")
+    script = _DEPLOY_SCRIPT % (MLP_DIMS,)
+    try:
+        out = simdev.run_simulated(script, n_devices=4, timeout=900)
+    except (OSError, subprocess.TimeoutExpired) as e:
+        print(f"  deploy_serve subprocess failed: {e!r}")
+        return {"error": repr(e), "single_vs_legacy": 0.0}
+    if out.returncode != 0:
+        print(f"  deploy_serve subprocess failed:\n{out.stderr[-2000:]}")
+        return {"error": out.stderr[-2000:], "single_vs_legacy": 0.0}
+    try:
+        res = simdev.last_json_line(out.stdout)
+    except (IndexError, ValueError) as e:
+        print(f"  deploy_serve emitted no result: {e!r}")
+        return {"error": f"unparseable output: {out.stdout[-500:]!r}",
+                "single_vs_legacy": 0.0}
+    print(f"  legacy shard+route path : "
+          f"{res['items_per_s_legacy']:8.0f} items/s")
+    print(f"  deploy() single app     : "
+          f"{res['items_per_s_deploy_single']:8.0f} items/s "
+          f"({res['single_vs_legacy']:.2f}x legacy; gate > 0.7)")
+    print(f"  deploy() deep+ocr duo   : "
+          f"{res['items_per_s_deploy_duo']:8.0f} items/s aggregate "
+          f"(deep {res['items_per_s_duo_deep']:.0f} + "
+          f"ocr {res['items_per_s_duo_ocr']:.0f}; "
+          f"per-app stats exact: {res['stats_exact']})")
+    return res
+
+
 def _fleet_serve() -> dict:
     print(f"\n== fleet_serve: continuous-batching router, 1 vs "
           f"{FLEET_DEVICES} simulated devices ==")
@@ -357,12 +510,16 @@ def run() -> dict:
     errs = _correctness()
     wc = _wallclock()
     fleet = _fleet_serve()
+    deploy = _deploy_serve()
     max_err = max(errs.values())
     ok = max_err < 1e-5 and wc["speedup"] >= 5.0 and \
         wc["chip_stream"]["vs_oracle_rel"] <= 1e-5 and \
-        fleet.get("scaling", 0.0) > 1.5
+        fleet.get("scaling", 0.0) > 1.5 and \
+        deploy.get("single_vs_legacy", 0.0) > 0.7 and \
+        bool(deploy.get("stats_exact", False))
     return {"tiles": tiles, "kernel_err": max_err, "kernel_errs": errs,
-            "wallclock": wc, "fleet_serve": fleet, "pass": bool(ok)}
+            "wallclock": wc, "fleet_serve": fleet,
+            "deploy_serve": deploy, "pass": bool(ok)}
 
 
 def write_bench_json(result: dict,

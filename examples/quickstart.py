@@ -1,7 +1,7 @@
 """Quickstart: the three layers of this framework in one script.
 
-  1. the paper's core — compile the deep app onto 1T1M/SRAM chips and
-     read each compiled chip's Tables II–VI accounting
+  1. the paper's core — deploy the deep app on BOTH systems from one
+     declarative spec and read the composed Tables II–VI accounting
   2. compile → program → stream — run the mapped network functionally
      through the unified chip API
   3. the LM substrate — train a reduced assigned-arch model end to end
@@ -11,23 +11,32 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import jax.numpy as jnp
 
-from repro.chip import compile_app, compile_chip
+from repro.chip import compile_chip
 from repro.configs.paper_apps import APPS
 from repro.core.costmodel import risc_cost
 from repro.core.crossbar_layer import MLPSpec, mlp_init
+from repro.deploy import AppSpec, DeploymentSpec, deploy
 
 
 def part1_map_the_paper():
-    print("== 1. compile the paper's MNIST deep network per system ==")
+    print("== 1. deploy the paper's MNIST deep network per system ==")
     app = APPS["deep"]
     risc = risc_cost(app)
     print(f"  {'risc':>8s}: {risc.cores:4d} cores, "
           f"{risc.area_mm2:8.3f} mm², {risc.power_mw:10.3f} mW  (1x)")
-    for name in ("digital", "1t1m"):
-        rep = compile_app(app, name).report()   # split→pack→place→route
+    # one declarative spec → both systems compiled, placed and
+    # accounted (split→pack→place→route per tenant, one fabric;
+    # analytic=True: sizing only, no weights programmed)
+    d = deploy(DeploymentSpec(apps=(
+        AppSpec("digital", "deep", system="sram", analytic=True),
+        AppSpec("1t1m", "deep", system="memristor", analytic=True),
+    ), n_chips=1))
+    for name, fleet_rep in d.report().apps.items():
+        rep = fleet_rep.chip
         print(f"  {name:>8s}: {rep.cores:4d} cores, "
               f"{rep.area_mm2:8.3f} mm², {rep.power_mw:10.3f} mW  "
               f"({risc.power_mw / rep.power_mw:.0f}x vs RISC)")
+    d.close()
 
 
 def part2_crossbar_execution():

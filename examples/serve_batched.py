@@ -1,19 +1,21 @@
 """Serving example: continuous batching over a reduced assigned arch,
-plus slot-scheduled streaming through a compiled crossbar chip fleet.
+plus declarative multi-app deployment of compiled crossbar chips.
 
 Part 1 submits a burst of mixed-length LM requests, reports per-request
 latency, engine throughput and slot utilization. The decode step is the
 exact function the multi-pod dry-run lowers for the ``decode_*`` shapes.
 
-Part 2 is the paper's own serving story through the SAME scheduler: an
-MLP classifier is compiled onto simulated 1T1M crossbars ONCE
-(``compile_chip``), fanned out over the visible devices
-(``shard_chip``), and the continuous-batching ``FleetRouter`` drives
-item streams through the programmed state — both engines implement the
-``repro.serving.StreamingEngine`` contract, so the driver loop is
-identical. (The old direct ``chip.serve()`` loop still exists for a
-single chip; the router is the same scheduler with admission control,
-latency accounting and multi-chip fan-out.)
+Part 2 is the paper's own serving story through the SAME scheduler,
+now behind ``repro.deploy``: one declarative spec compiles an MLP
+classifier onto simulated 1T1M crossbars, fans it over the visible
+devices and wires the continuous-batching router — what previously
+took four hand-assembled modules (``compile_chip`` → ``shard_chip`` →
+``FleetRouter`` → sources) is one ``deploy()`` call.
+
+Part 3 is what the deployment API adds: a SECOND tenant co-resident on
+the same fabric (the paper's multi-application story, Tables II–VI),
+with per-app lanes, per-app stats inside one fleet roll-up, and a live
+``reprogram`` weight swap that never recompiles.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
@@ -22,10 +24,9 @@ import time
 import jax
 import numpy as np
 
-from repro.chip import ChipRequest, compile_chip
 from repro.configs import get_reduced
 from repro.core.crossbar_layer import MLPSpec, mlp_init
-from repro.fleet import FleetRouter, shard_chip
+from repro.deploy import AppSpec, DeploymentSpec, deploy
 from repro.models import model as model_lib
 from repro.serving.engine import Engine, Request
 
@@ -58,35 +59,34 @@ def main():
           f"slot efficiency {total_new / max(steps * eng.slots, 1):.0%})")
 
     serve_crossbar_stream()
+    serve_two_tenants()
 
 
 def serve_crossbar_stream(n_requests: int = 12, slots: int = 4):
-    """Compile a classifier chip once, fan it out as a fleet, then let
-    the continuous-batching router serve a burst of item streams
-    against the programmed state (§III.D stream-many — the chip side
-    of the StreamingEngine contract)."""
-    print("\n== compiled-chip classifier serving (fleet router) ==")
+    """Deploy a classifier app once, then let the continuous-batching
+    router serve a burst of item streams against the programmed state
+    (§III.D stream-many — one declarative call instead of the old
+    compile_chip → shard_chip → FleetRouter wiring, same semantics)."""
+    print("\n== compiled-chip classifier serving (repro.deploy) ==")
     spec = MLPSpec((64, 48, 10), activation="threshold",
                    out_activation="linear")
     params = mlp_init(jax.random.PRNGKey(0), spec)
 
     t0 = time.perf_counter()
-    chip = compile_chip(spec, params=params, system="memristor")
-    fleet = shard_chip(chip)        # one chip per visible device
+    d = deploy(AppSpec("classify", spec, params=params,
+                       system="memristor", lanes_per_chip=slots))
     t_prog = time.perf_counter() - t0
 
-    eng = FleetRouter(fleet, lanes_per_chip=slots)
     rng = np.random.default_rng(1)
-    reqs = [ChipRequest(uid=i, items=rng.uniform(-1, 1, (8 + 5 * (i % 4),
-                                                         64)))
-            for i in range(n_requests)]
-    for r in reqs:
-        eng.submit(r)
-    eng.run_until_drained()        # ONE fleet.stream batch per step
-    stats = eng.stats()
-    print(f"  compiled once in {t_prog * 1e3:.1f} ms "
-          f"({fleet.total_cores} cores on {fleet.n_chips} chip(s)); "
-          f"{len(reqs)} requests / {stats.items} "
+    bursts = [rng.uniform(-1, 1, (8 + 5 * (i % 4), 64))
+              .astype(np.float32) for i in range(n_requests)]
+    for items in bursts:
+        d.submit("classify", items)
+    d.run_until_drained()          # ONE fleet batch per engine step
+    stats = d.stats().fleet
+    print(f"  deployed once in {t_prog * 1e3:.1f} ms "
+          f"({d.chip('classify').total_cores} cores x {d.n_chips} "
+          f"chip(s)); {len(bursts)} requests / {stats.items} "
           f"items in {stats.steps} engine steps, "
           f"{stats.wall_s * 1e3:.1f} ms "
           f"({stats.items_per_second:.0f} items/s; slot efficiency "
@@ -95,6 +95,48 @@ def serve_crossbar_stream(n_requests: int = 12, slots: int = 4):
           f"{stats.latency_s_p50 * 1e3:.1f} ms, p95 "
           f"{stats.latency_s_p95 * 1e3:.1f} ms "
           f"(mean queue wait {stats.wait_s_mean * 1e3:.1f} ms)")
+    d.close()
+
+
+def serve_two_tenants(n_requests: int = 8):
+    """Two apps co-resident on ONE fabric: per-app lane budgets, mixed
+    traffic through one router, per-app stats inside one fleet
+    roll-up, and a live weight swap for one tenant (reprogram — zero
+    recompiles, the other tenant never notices)."""
+    print("\n== two tenants, one fabric (repro.deploy) ==")
+    spec_cls = MLPSpec((64, 48, 10), activation="threshold",
+                       out_activation="linear")
+    spec_det = MLPSpec((32, 16, 2), activation="threshold",
+                       out_activation="linear")
+    p_cls = mlp_init(jax.random.PRNGKey(0), spec_cls)
+    p_det = mlp_init(jax.random.PRNGKey(1), spec_det)
+    d = deploy(DeploymentSpec(apps=(
+        AppSpec("classify", spec_cls, params=p_cls, system="1t1m",
+                lanes_per_chip=3),
+        AppSpec("detect", spec_det, params=p_det, system="sram",
+                lanes_per_chip=1),
+    )))
+    rng = np.random.default_rng(2)
+    for i in range(n_requests):
+        d.submit("classify",
+                 rng.uniform(-1, 1, (6 + i, 64)).astype(np.float32))
+        d.submit("detect",
+                 rng.uniform(-1, 1, (4, 32)).astype(np.float32))
+    d.run_until_drained()
+    # live §III.D weight swap: re-encode ONE tenant's tiles, no compile
+    d.reprogram("detect", mlp_init(jax.random.PRNGKey(9), spec_det))
+    d.submit("detect", rng.uniform(-1, 1, (4, 32)).astype(np.float32))
+    d.run_until_drained()
+    stats = d.stats()
+    for name, s in stats.apps.items():
+        print(f"  {name:>9s}: {s.requests} req / {s.items} items on "
+              f"{s.lanes} lanes (p95 {s.latency_s_p95 * 1e3:.1f} ms)")
+    print(f"      fleet: {stats.fleet.requests} req / "
+          f"{stats.fleet.items} items "
+          f"({stats.fleet.items_per_second:.0f} items/s; detect "
+          f"reprogrammed live, zero recompiles)")
+    print("  " + str(d.report()).replace("\n", "\n  "))
+    d.close()
 
 
 if __name__ == "__main__":

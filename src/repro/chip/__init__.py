@@ -11,12 +11,15 @@ Self-check:  PYTHONPATH=src python -m repro.chip --selftest
 """
 from repro.chip.compile import (ChipRateWarning, CompiledChip,
                                 StreamLayer, compile_app, compile_chip,
-                                stream_pipeline, validate_stream_rate)
+                                compile_count, program_plan,
+                                reprogram_chip, stream_pipeline,
+                                validate_stream_rate)
 from repro.chip.report import ChipReport, chip_report
 from repro.chip.serving import ChipEngine, ChipRequest, ChipRequestState
 
 __all__ = ["ChipRateWarning", "CompiledChip", "StreamLayer",
-           "compile_app", "compile_chip", "stream_pipeline",
+           "compile_app", "compile_chip", "compile_count",
+           "program_plan", "reprogram_chip", "stream_pipeline",
            "validate_stream_rate",
            "ChipReport", "chip_report",
            "ChipEngine", "ChipRequest", "ChipRequestState"]

@@ -56,7 +56,33 @@ from repro.core.crossbar_layer import (CrossbarParams, DigitalParams,
 from repro.core.device import DEFAULT_DEVICE, DeviceModel
 from repro.core.mapping import (Mapping, Net, map_networks)
 from repro.core.neural_core import CoreGeometry
+from repro.core.systems import normalize_system, system_mode
 from repro.core import quantization as q
+
+# full compile passes (map → route → program) this process has run.
+# ``repro.deploy``'s live-reprogram contract is "swap one tenant's
+# weights with NO recompile of the fabric"; this counter is how that
+# claim is *asserted* rather than assumed (selftest + tier-1).
+_COMPILE_COUNT = 0
+
+
+def compile_count() -> int:
+    """Monotone count of :func:`compile_chip` passes in this process."""
+    return _COMPILE_COUNT
+
+
+# legacy serving-assembly entry points warn ONCE per process when used
+# directly (repro.deploy is the supported surface); keyed so tests can
+# reset and assert the exactly-once contract
+_DEPRECATION_WARNED: set = set()
+
+
+def warn_once_deprecated(key: str, message: str, *,
+                         stacklevel: int = 3) -> None:
+    if key in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(key)
+    warnings.warn(message, DeprecationWarning, stacklevel=stacklevel)
 
 
 def _static():
@@ -254,6 +280,9 @@ class CompiledChip:
     tsv_bits_per_item: Optional[float]
     plan: Optional[Tuple[StreamLayer, ...]]   # None → analytic-only
     dims: Optional[Tuple[int, ...]] = None
+    # how the plan was encoded (weight_bits/device/r_seg) — what
+    # reprogram_chip must reuse for a weights-ONLY swap to hold
+    program_kw: Optional[dict] = None
 
     # ------------------------------------------------------------ #
     @property
@@ -295,7 +324,17 @@ class CompiledChip:
         return chip_report(self)
 
     def serve(self, *, slots: int = 4, **kw):
-        """A :class:`repro.serving.StreamingEngine` over this chip."""
+        """A :class:`repro.serving.StreamingEngine` over this chip.
+
+        Deprecated as a user entry point: ``repro.deploy.deploy`` builds
+        the same engine (and the fleet/multi-app variants) from one
+        declarative spec. Semantics unchanged; warns once per process.
+        """
+        warn_once_deprecated(
+            "CompiledChip.serve",
+            "CompiledChip.serve() is deprecated as a direct entry "
+            "point; declare the app with repro.deploy.deploy(spec) and "
+            "use Deployment.submit/serve (same engine underneath)")
         from repro.chip.serving import ChipEngine
         return ChipEngine(self, slots=slots, **kw)
 
@@ -309,15 +348,16 @@ def _chip_flatten(chip: CompiledChip):
     if static is None:
         static = _ChipStatic((chip.system, chip.geom, chip.mapping,
                               chip.route, chip.items_per_second,
-                              chip.tsv_bits_per_item, chip.dims))
+                              chip.tsv_bits_per_item, chip.dims,
+                              chip.program_kw))
         chip.__dict__["_static"] = static
     return (chip.plan,), static
 
 
 def _chip_unflatten(static: _ChipStatic, children) -> CompiledChip:
-    (system, geom, mapping, route, rate, tsv, dims) = static.value
+    (system, geom, mapping, route, rate, tsv, dims, pkw) = static.value
     chip = CompiledChip(system, geom, mapping, route, rate, tsv,
-                        children[0], dims)
+                        children[0], dims, pkw)
     chip.__dict__["_static"] = static
     return chip
 
@@ -427,14 +467,14 @@ def compile_chip(networks: NetworksLike, *,
     against the routed TDM link capacity: an un-routable rate warns
     (:class:`ChipRateWarning`) or, with ``strict_rate=True``, raises.
     """
-    if system == "1t1m":
-        system = "memristor"
-    if system not in ("memristor", "digital"):
-        raise ValueError(f"compile_chip: unknown system {system!r}")
-    mode = "crossbar" if system == "memristor" else "digital"
+    system = normalize_system(system, context="compile_chip")
+    mode = system_mode(system)
+    global _COMPILE_COUNT
+    _COMPILE_COUNT += 1
 
     prog: Optional[ProgrammedMLP] = None
     dims: Optional[Tuple[int, ...]] = None
+    encoded_here = False                # did THIS compile run the encoder?
     if isinstance(networks, ProgrammedMLP):
         prog = networks
         if (prog.mode == "crossbar") != (system == "memristor"):
@@ -454,6 +494,7 @@ def compile_chip(networks: NetworksLike, *,
                                geom=geom or _default_geom(system),
                                device=device, weight_bits=weight_bits,
                                noise_key=noise_key, r_seg=r_seg)
+            encoded_here = True
     else:
         if params is not None:
             raise ValueError(
@@ -473,11 +514,111 @@ def compile_chip(networks: NetworksLike, *,
 
     plan: Optional[Tuple[StreamLayer, ...]] = None
     if prog is not None:
-        plan = tuple(_layer_plan(lp, b, act, device)
-                     for lp, b, act in zip(prog.layers, prog.biases,
-                                           prog.activations))
+        plan = program_plan(prog, device=device)
+    # encoding knobs recorded only when this compile ran the encoder —
+    # for a caller-programmed MLP they describe nothing (reprogram_chip
+    # then demands them explicitly instead of guessing)
     return CompiledChip(system, mapping.geom, mapping, route,
-                        items_per_second, tsv_bits_per_item, plan, dims)
+                        items_per_second, tsv_bits_per_item, plan, dims,
+                        dict(weight_bits=weight_bits, device=device,
+                             r_seg=r_seg) if encoded_here else None)
+
+
+def program_plan(prog: ProgrammedMLP, *,
+                 device: DeviceModel = DEFAULT_DEVICE
+                 ) -> Tuple[StreamLayer, ...]:
+    """The programming half of a compile, alone: turn an already
+    programmed MLP into the streamable per-layer plan (tiles +
+    Fig. 11 combiner neurons). ``compile_chip`` calls this after
+    map+route; :func:`reprogram_chip` calls it INSTEAD of them."""
+    return tuple(_layer_plan(lp, b, act, device)
+                 for lp, b, act in zip(prog.layers, prog.biases,
+                                       prog.activations))
+
+
+def reprogram_chip(chip: CompiledChip, params, *,
+                   spec: Optional[MLPSpec] = None,
+                   weight_bits: Optional[int] = None,
+                   device: Optional[DeviceModel] = None,
+                   noise_key: Optional[jax.Array] = None,
+                   r_seg: Optional[float] = None) -> CompiledChip:
+    """Swap a compiled chip's weights WITHOUT recompiling the fabric.
+
+    The paper's §III.D economics split a chip's life into program-once
+    and stream-many; this is the third verb that story implies: the
+    mapping, placement and routed TDM schedule are functions of the
+    network *shape* only, so new weights for the same topology need
+    only re-encoding into tile state (``program_mlp`` +
+    :func:`program_plan`) — map_networks/route never run, which is what
+    keeps a live tenant-weight swap (``repro.deploy``'s ``reprogram``)
+    milliseconds instead of a full compile, and is asserted by
+    :func:`compile_count` staying put.
+
+    The returned chip shares the original's mapping/route objects;
+    only ``plan`` is new. ``spec`` defaults to the chip's own dims and
+    per-layer activations, and ``weight_bits``/``device``/``r_seg``
+    default to the values the chip was COMPILED with — a bare
+    reprogram re-encodes exactly the way the original programming did
+    (``noise_key`` is per-programming-event, so it never defaults to
+    the old one).
+    """
+    if chip.plan is None:
+        raise ValueError(
+            "reprogram_chip: this chip is analytic-only (compiled "
+            "without weights) — there is no programmed state to swap; "
+            "compile_chip(spec, params=...) first")
+    if chip.program_kw is None and \
+            (weight_bits is None or device is None or r_seg is None):
+        # the chip was compiled from an externally-programmed MLP, so
+        # how its tiles were encoded is unknown — guessing defaults
+        # would silently change the tenant's quantization
+        raise ValueError(
+            "reprogram_chip: this chip was compiled from a "
+            "pre-programmed MLP, so its original encoding parameters "
+            "are not recorded — pass weight_bits, device and r_seg "
+            "explicitly to guarantee the swap re-encodes the same way")
+    compiled_kw = chip.program_kw or {}
+    if weight_bits is None:
+        weight_bits = compiled_kw["weight_bits"]
+    if device is None:
+        device = compiled_kw["device"]
+    if r_seg is None:
+        r_seg = compiled_kw["r_seg"]
+    explicit_spec = spec
+    if spec is None:
+        spec = MLPSpec(chip.dims,
+                       activation=chip.plan[0].activation,
+                       out_activation=chip.plan[-1].activation)
+    if tuple(spec.dims) != tuple(chip.dims):
+        raise ValueError(
+            f"reprogram_chip: new network dims {tuple(spec.dims)} do "
+            f"not match the compiled fabric {tuple(chip.dims)} — a "
+            f"different topology re-maps and re-routes; use "
+            f"compile_chip")
+    if len(params) != len(chip.dims) - 1:
+        raise ValueError(
+            f"reprogram_chip: {len(params)} weight layer(s) do not "
+            f"match the compiled fabric's {len(chip.dims) - 1}")
+    for i, p in enumerate(params):
+        want = (chip.dims[i], chip.dims[i + 1])
+        if tuple(p["w"].shape) != want:
+            raise ValueError(
+                f"reprogram_chip: layer {i} weights {tuple(p['w'].shape)}"
+                f" do not match the compiled fabric {want}")
+    prog = program_mlp(params, spec, mode=system_mode(chip.system),
+                       geom=chip.geom, device=device,
+                       weight_bits=weight_bits, noise_key=noise_key,
+                       r_seg=r_seg)
+    if explicit_spec is None:
+        # tile programming is activation-independent, but the plan
+        # records one activation PER layer — preserve the compiled
+        # chip's own schedule rather than the MLPSpec reconstruction,
+        # which can only express hidden/out (a hand-built
+        # heterogeneous ProgrammedMLP would be silently re-activated)
+        prog = dataclasses.replace(
+            prog, activations=tuple(l.activation for l in chip.plan))
+    return dataclasses.replace(chip, plan=program_plan(prog,
+                                                       device=device))
 
 
 def _default_geom(system: str) -> CoreGeometry:
@@ -491,8 +632,7 @@ def compile_app(app, system: str, *,
     ``repro.configs.paper_apps.AppConfig``, duck-typed) at its real-time
     load: the analytic chip whose ``report()`` is the app's Tables
     II–VI row for ``system``."""
-    if system == "1t1m":
-        system = "memristor"
+    system = normalize_system(system, context="compile_app")
     nets = app.memristor_nets if system == "memristor" else app.sram_nets
     return compile_chip(nets, system=system, geom=geom,
                         items_per_second=app.items_per_second,

@@ -14,6 +14,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
+from repro.core.systems import normalize_system
+
 Net = Tuple[int, Tuple[int, ...]]  # (instances, layer dims)
 
 
@@ -53,15 +55,21 @@ class AppConfig:
         return self.sensor_bits_per_item if self.sensor_bits_per_item \
             is not None else self.inputs_per_item * 8.0
 
+    def nets(self, system: str) -> Tuple[Net, ...]:
+        """The app's network decomposition for a system (any alias)."""
+        return self.memristor_nets \
+            if normalize_system(system) == "memristor" else self.sram_nets
+
     def sensor_flags(self, system: str) -> Tuple[bool, ...]:
+        system = normalize_system(system)
         nets = self.memristor_nets if system == "memristor" else self.sram_nets
         flags = self.memristor_sensor if system == "memristor" \
             else self.sram_sensor
         return flags if flags else (True,) * len(nets)
 
     def net_deps(self, system: str):
-        return self.memristor_deps if system == "memristor" \
-            else self.sram_deps
+        return self.memristor_deps \
+            if normalize_system(system) == "memristor" else self.sram_deps
 
 
 # -- real-time requirements (section V.C) ------------------------------- #

@@ -31,6 +31,7 @@ from repro.core.mapping import (Mapping, map_networks, nn_macs,
 from repro.core.neural_core import (CoreGeometry, DigitalCore,
                                     MemristorCore, RiscCore,
                                     analog_precision_feasible)
+from repro.core.systems import normalize_system
 
 
 @dataclasses.dataclass
@@ -123,6 +124,9 @@ def fabric_cost(mapping: Mapping, route: routing_lib.RouteReport, *,
 
 def specialized_cost(app: AppConfig, system: str,
                      geom: Optional[CoreGeometry] = None) -> SystemCost:
+    # "1t1m" used to fall through to the SRAM branch here; normalizing
+    # at the entry point is the fix the alias helper exists for
+    system = normalize_system(system, context="specialized_cost")
     nets = app.memristor_nets if system == "memristor" else app.sram_nets
     mapping = map_networks(nets, system=system, geom=geom,
                            items_per_second=app.items_per_second,
@@ -159,6 +163,7 @@ def all_tables() -> Dict[str, Dict[str, SystemCost]]:
 def design_space(system: str, geometries=None) -> Dict[str, Dict]:
     """Sweep core geometry; per app report area & power normalized to the
     best geometry for that app (the paper's Figs. 13/14 procedure)."""
+    system = normalize_system(system, context="design_space")
     if geometries is None:
         geometries = [CoreGeometry(r, r // 2)
                       for r in (32, 64, 128, 256, 512)] \
@@ -168,9 +173,7 @@ def design_space(system: str, geometries=None) -> Dict[str, Dict]:
     for app_id, app in APPS.items():
         rows = {}
         for geom in geometries:
-            c = specialized_cost(
-                app, "memristor" if system == "memristor" else "digital",
-                geom=geom)
+            c = specialized_cost(app, system, geom=geom)
             rows[f"{geom.rows}x{geom.cols}"] = {
                 "area_mm2": c.area_mm2, "power_mw": c.power_mw,
                 "cores": c.cores,

@@ -1,0 +1,208 @@
+"""CI smoke entry point.
+
+``PYTHONPATH=src python -m repro.deploy --selftest`` — single process,
+simulated host devices (default 2; ``--devices N``; the flag is pinned
+into XLA_FLAGS before jax initializes, which is why this package's
+imports are lazy). Two apps co-resident on the simulated fleet:
+
+  * ``deploy()`` single-app stream == the legacy
+    ``compile_chip``→``shard_chip`` path at rel 0.0 (memristor AND
+    digital);
+  * a 2-app deployment serves mixed traffic through the one multi-app
+    router with every routed output matching the direct stream, and
+    the per-app stats rows summing EXACTLY to the fleet roll-up
+    (requests, items, rejected, lanes);
+  * ``reprogram`` swaps one tenant's weights with NO compile pass
+    (``repro.chip.compile_count`` pinned across the call) and the
+    swapped tenant matches a freshly compiled reference at rel 0.0
+    while the other tenant is bit-unchanged;
+  * the deployment report composes the per-app Tables II–VI accounting
+    linearly and folds the served roll-up in.
+
+Exit 0 iff every check passes.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def selftest(verbose: bool = True) -> bool:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.chip import compile_chip, compile_count
+    from repro.core.crossbar_layer import MLPSpec, mlp_init
+    from repro.data.pipeline import SensorPipeline
+    from repro.deploy import AppSpec, DeploymentSpec, deploy
+    from repro.fleet import FleetRouter, StreamSource, shard_chip
+
+    ok = True
+
+    def check(name, cond, detail=""):
+        nonlocal ok
+        ok = ok and bool(cond)
+        if verbose:
+            print(f"  [{'ok' if cond else 'FAIL'}] {name}"
+                  f"{'  (' + detail + ')' if detail else ''}")
+
+    n_dev = len(jax.devices())
+    check("simulated fleet devices", n_dev >= 2, f"{n_dev} devices")
+
+    def rel(a, b):
+        a, b = np.asarray(a), np.asarray(b)
+        return float(np.max(np.abs(a - b)) /
+                     max(np.max(np.abs(b)), 1e-12))
+
+    # -- single-app deploy == legacy path, both systems ------------- #
+    dims = (64, 48, 10)
+    spec_a = MLPSpec(dims, activation="threshold",
+                     out_activation="linear")
+    params_a = mlp_init(jax.random.PRNGKey(0), spec_a)
+    x = np.asarray(jax.random.uniform(jax.random.PRNGKey(1),
+                                      (4 * n_dev + 3, dims[0])),
+                   np.float32)
+    for system in ("memristor", "digital"):
+        legacy = shard_chip(compile_chip(spec_a, params=params_a,
+                                         system=system))
+        d1 = deploy(AppSpec("a", spec_a, params=params_a,
+                            system=system))
+        r = rel(d1.stream("a", x), legacy.stream(x))
+        check(f"single-app deploy == legacy path ({system}, rel 0.0)",
+              r == 0.0, f"rel {r:.1e}")
+        d1.close()
+
+    # -- two co-resident apps over one mesh ------------------------- #
+    dims_b = (32, 16, 4)
+    spec_b = MLPSpec(dims_b, activation="threshold",
+                     out_activation="linear")
+    params_b = mlp_init(jax.random.PRNGKey(7), spec_b)
+    d = deploy(DeploymentSpec(apps=(
+        AppSpec("alpha", spec_a, params=params_a, system="1t1m",
+                lanes_per_chip=2),
+        AppSpec("beta", spec_b, params=params_b, system="sram",
+                lanes_per_chip=1, queue_limit=8),
+    )))
+    check("deployment spans all devices and both tenants",
+          d.n_chips == n_dev and d.apps == ["alpha", "beta"])
+
+    rng = np.random.default_rng(2)
+    sub_a = [rng.uniform(0, 1, (3 + i, dims[0])).astype(np.float32)
+             for i in range(4)]
+    sub_b = [rng.uniform(0, 1, (2 + i, dims_b[0])).astype(np.float32)
+             for i in range(5)]
+    for items in sub_a:
+        d.submit("alpha", items)
+    for items in sub_b:
+        d.submit("beta", items)
+    done = list(d.run_until_drained())
+    check("mixed traffic drains", len(done) == len(sub_a) + len(sub_b))
+    chip_a, chip_b = d.chip("alpha"), d.chip("beta")
+    match = all(
+        rel(st.result,
+            (chip_a if st.request.key == "alpha" else chip_b)
+            .stream(jnp.asarray(st.request.items))) == 0.0
+        for st in done)
+    check("routed outputs match each app's direct stream (rel 0.0)",
+          match)
+
+    stats = d.stats()
+    roll = {
+        "requests": sum(s.requests for s in stats.apps.values()),
+        "items": sum(s.items for s in stats.apps.values()),
+        "rejected": sum(s.rejected for s in stats.apps.values()),
+        "lanes": sum(s.lanes for s in stats.apps.values()),
+    }
+    check("per-app stats roll up EXACTLY to the fleet row",
+          roll["requests"] == stats.fleet.requests ==
+          len(sub_a) + len(sub_b) and
+          roll["items"] == stats.fleet.items ==
+          sum(a.shape[0] for a in sub_a) +
+          sum(b.shape[0] for b in sub_b) and
+          roll["rejected"] == stats.fleet.rejected and
+          roll["lanes"] == stats.fleet.lanes == 3 * n_dev,
+          str(roll))
+
+    # -- sensor-fed closed loop over per-app sources ---------------- #
+    pipe = SensorPipeline(window=8, stride=8, height=16, width=32,
+                          frames_per_step=1)
+    # tenants stream different widths off ONE sensor stream: project
+    # each frame's windows to the tenant's item shape
+    class _Proj:
+        def batch(self, step):
+            full = np.asarray(pipe.batch(step), np.float32)
+            return full[:, :dims_b[0]]
+    src_b = StreamSource(_Proj(), n_requests=6, capacity=3)
+
+    class _ProjA:
+        def batch(self, step):
+            full = np.asarray(pipe.batch(step), np.float32)
+            reps = -(-dims[0] // full.shape[1])
+            return np.tile(full, (1, reps))[:, :dims[0]]
+    src_a = StreamSource(_ProjA(), n_requests=5, capacity=3)
+    served = d.serve({"alpha": src_a, "beta": src_b})
+    check("per-app sources drain through the one router",
+          src_a.exhausted and src_b.exhausted and
+          len(served) == len(done) + 11)
+
+    # -- live reprogram: no compile pass ---------------------------- #
+    params_a2 = mlp_init(jax.random.PRNGKey(42), spec_a)
+    before_stream_b = np.asarray(d.stream("beta", sub_b[0]))
+    n_compiles = compile_count()
+    d.reprogram("alpha", params_a2)
+    check("reprogram runs ZERO compile passes",
+          compile_count() == n_compiles,
+          f"compile_count {compile_count()}")
+    ref2 = shard_chip(compile_chip(spec_a, params=params_a2,
+                                   system="memristor"))
+    r = rel(d.stream("alpha", x), ref2.stream(x))
+    check("reprogrammed tenant == freshly compiled reference "
+          "(rel 0.0)", r == 0.0, f"rel {r:.1e}")
+    r_b = rel(d.stream("beta", sub_b[0]), before_stream_b)
+    check("other tenant bit-unchanged by the swap", r_b == 0.0)
+
+    # -- report composition ----------------------------------------- #
+    rep = d.report()
+    area = sum(f.area_mm2 for f in rep.apps.values())
+    check("deployment report composes per-app accounting",
+          set(rep.apps) == {"alpha", "beta"} and
+          abs(rep.area_mm2 - area) < 1e-12 and
+          rep.apps["alpha"].n_chips == n_dev and
+          rep.served is not None and
+          rep.served.fleet.items == d.stats().fleet.items)
+    d.close()
+    closed_ok = False
+    try:
+        d.stream("alpha", x)
+    except RuntimeError:
+        closed_ok = True
+    check("closed deployment refuses verbs", closed_ok)
+
+    if verbose:
+        print(f"selftest: {'PASS' if ok else 'FAIL'}")
+    return ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.deploy")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run the declarative-deployment smoke check")
+    ap.add_argument("--devices", type=int, default=2,
+                    help="simulated host devices (default 2; ignored "
+                         "when jax is already initialized or XLA_FLAGS "
+                         "is set)")
+    args = ap.parse_args(argv)
+    if not args.selftest:
+        ap.print_help()
+        return 2
+    if "jax" not in sys.modules and "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_"
+                                   f"count={args.devices}")
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    return 0 if selftest() else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

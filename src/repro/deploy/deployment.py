@@ -1,0 +1,300 @@
+"""deploy(spec): one declarative call from specs to a served fabric.
+
+What the call does, in order, per app: resolve the network (paper app
+name / MLPSpec+params / ProgrammedMLP), ``compile_chip`` it for the
+app's system at its SLO (one full map→route→program pass), then place
+the programmed plan ONCE on the one shared ``"chip"`` mesh
+(:class:`repro.fleet.ShardedChip` → ``replicate_to_mesh``). The
+returned :class:`Deployment` owns the multi-app router over those
+members and speaks every serving verb the legacy four-module wiring
+spoke — plus the two the multi-tenant story adds: per-app stats inside
+one fleet roll-up, and :meth:`Deployment.reprogram`, the live §III.D
+weight swap that re-encodes ONE tenant's tiles with no recompile of
+anything (asserted via :func:`repro.chip.compile_count`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.chip.compile import (CompiledChip, compile_chip,
+                                reprogram_chip)
+from repro.core.crossbar_layer import (MLPSpec, ProgrammedMLP, mlp_init)
+from repro.deploy.report import DeploymentReport, deployment_report
+from repro.deploy.router import (DeploymentStats,
+                                 DistributedMultiAppRouter,
+                                 MultiAppRouter)
+from repro.deploy.spec import AppSpec, DeploymentSpec
+from repro.fleet.shard import ShardedChip
+from repro.launch.mesh import make_fleet_mesh, mesh_spans_processes
+
+
+def _resolve_network(app: AppSpec):
+    """→ (networks-arg for compile_chip, params, compile kwargs)."""
+    net = app.network
+    if isinstance(net, str):
+        from repro.configs.paper_apps import APPS
+
+        cfg = APPS.get(net)
+        if cfg is None:
+            raise ValueError(f"app {app.name!r}: unknown paper app "
+                             f"{net!r} (known: {sorted(APPS)})")
+        nets = cfg.nets(app.system)
+        rate = app.items_per_second or cfg.items_per_second
+        kw = dict(items_per_second=rate,
+                  sensor_flags=cfg.sensor_flags(app.system),
+                  deps=cfg.net_deps(app.system),
+                  tsv_bits_per_item=cfg.tsv_bits_per_item)
+        if len(nets) == 1 and nets[0][0] == 1 and not app.analytic:
+            # single-net paper app: streamable, with deterministic
+            # weights unless the spec brought its own
+            import jax
+
+            spec = MLPSpec(nets[0][1], activation="threshold",
+                           out_activation="linear")
+            params = app.params if app.params is not None else \
+                mlp_init(jax.random.PRNGKey(app.seed), spec)
+            return spec, params, kw
+        if app.params is not None:
+            raise ValueError(
+                f"app {app.name!r}: paper app {net!r} maps to "
+                f"{len(nets)} networks for system {app.system!r}; "
+                "params only apply to single-net apps")
+        return nets, None, kw           # analytic-only tenant
+    if isinstance(net, ProgrammedMLP) and app.analytic:
+        raise ValueError(f"app {app.name!r}: a ProgrammedMLP is "
+                         "already programmed state — analytic=True "
+                         "does not apply")
+    if isinstance(net, (MLPSpec, ProgrammedMLP)):
+        return net, app.params, dict(
+            items_per_second=app.items_per_second)
+    # bare net tuples — the paper's app notation, analytic-only
+    return net, app.params, dict(items_per_second=app.items_per_second)
+
+
+@dataclasses.dataclass
+class _Member:
+    """One deployed tenant: its spec, compile, and fleet placement
+    (``sharded`` is None for analytic-only tenants)."""
+    spec: AppSpec
+    chip: CompiledChip
+    sharded: Optional[ShardedChip]
+    mlp_spec: Optional[MLPSpec]         # for reprogram
+
+
+class Deployment:
+    """A live multi-app fabric (build with :func:`deploy`)."""
+
+    def __init__(self, spec: DeploymentSpec):
+        self.spec = spec
+        if spec.mesh is not None:
+            self.mesh = spec.mesh
+            if "chip" not in self.mesh.axis_names:
+                raise ValueError(
+                    f"deploy: mesh has no 'chip' axis (axes: "
+                    f"{self.mesh.axis_names})")
+        else:
+            self.mesh = make_fleet_mesh(spec.n_chips)
+        self.is_distributed = mesh_spans_processes(self.mesh)
+        self.n_chips = self.mesh.devices.size
+        self._closed = False
+
+        self._members: Dict[str, _Member] = {}
+        for app in spec.apps:
+            networks, params, kw = _resolve_network(app)
+            chip = compile_chip(networks, params=params,
+                                system=app.system,
+                                weight_bits=app.weight_bits,
+                                strict_rate=spec.strict_rate, **kw)
+            sharded = None
+            if chip.plan is not None:
+                sharded = ShardedChip(
+                    chip, self.mesh,
+                    items_per_second=kw.get("items_per_second", 0.0),
+                    strict_rate=spec.strict_rate)
+            mlp_spec = networks if isinstance(networks, MLPSpec) else None
+            self._members[app.name] = _Member(app, chip, sharded,
+                                              mlp_spec)
+
+        streamable = {name: m.sharded
+                      for name, m in self._members.items()
+                      if m.sharded is not None}
+        self.router: Optional[MultiAppRouter] = None
+        if streamable:
+            # each router schedules lanes for the chips it can address:
+            # all of them single-process, only the LOCAL ones on a
+            # distributed mesh (same contract as DistributedFleetRouter
+            # — every rank runs lanes_per_chip × n_local_chips, so the
+            # fleet-wide budget still sums to lanes_per_chip × n_chips)
+            lane_chips = next(iter(streamable.values())).n_local_chips \
+                if self.is_distributed else self.n_chips
+            lanes = {name: self._members[name].spec.lanes_per_chip *
+                     lane_chips for name in streamable}
+            limits = {name: (self._members[name].spec.queue_limit
+                             if self._members[name].spec.queue_limit
+                             is not None else spec.queue_limit)
+                      for name in streamable}
+            cls = DistributedMultiAppRouter if self.is_distributed \
+                else MultiAppRouter
+            self.router = cls(streamable, lanes=lanes,
+                              queue_limits=limits,
+                              use_kernel=spec.use_kernel)
+
+    # ---------------- introspection -------------------------------- #
+    @property
+    def apps(self) -> List[str]:
+        return list(self._members)
+
+    def chip(self, app: str) -> CompiledChip:
+        return self._member(app).chip
+
+    def _member(self, app: str) -> _Member:
+        if self._closed:
+            raise RuntimeError("deployment is closed")
+        m = self._members.get(app)
+        if m is None:
+            raise ValueError(f"unknown app {app!r} (deployed: "
+                             f"{sorted(self._members)})")
+        return m
+
+    def _streaming_member(self, app: str) -> _Member:
+        m = self._member(app)
+        if m.sharded is None:
+            raise ValueError(
+                f"app {app!r} is analytic-only (no weights): report() "
+                "works, but stream/submit/serve need programmed state")
+        return m
+
+    def _live_router(self) -> MultiAppRouter:
+        if self._closed:
+            raise RuntimeError("deployment is closed")
+        if self.router is None:
+            raise ValueError("no streamable app in this deployment "
+                             "(every tenant is analytic-only)")
+        return self.router
+
+    # ---------------- serving verbs -------------------------------- #
+    def stream(self, app: str, x, *, use_kernel: Optional[bool] = None):
+        """One-shot batch through ``app``'s fleet placement — identical
+        arithmetic to the legacy ``shard_chip(...).stream`` path (the
+        member IS a ShardedChip), hence rel 0.0 against it."""
+        m = self._streaming_member(app)
+        uk = self.spec.use_kernel if use_kernel is None else use_kernel
+        if self.is_distributed:
+            return m.sharded.stream_local(x, use_kernel=uk)
+        return m.sharded.stream(x, use_kernel=uk)
+
+    def submit(self, app: str, items) -> bool:
+        """Queue one item-stream request for ``app`` on the shared
+        router; False = that app's admission queue is full."""
+        self._streaming_member(app)
+        return self._live_router().submit_app(app, items) is not None
+
+    def step(self) -> int:
+        return self._live_router().step()
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List:
+        return self._live_router().run_until_drained(max_steps)
+
+    def serve(self, sources: Union[Mapping[str, Any], Any], *,
+              max_steps: int = 100_000) -> List:
+        """Closed serving loop over per-app bounded sources
+        (``{app: StreamSource}``; a bare source binds to the single
+        streamable app)."""
+        router = self._live_router()
+        if not isinstance(sources, Mapping):
+            if len(router.members) != 1:
+                raise ValueError(
+                    "serve: a bare source is ambiguous with "
+                    f"{len(router.members)} streamable apps — pass "
+                    "{app_name: source}")
+            sources = {next(iter(router.members)): sources}
+        return router.serve(sources, max_steps=max_steps)
+
+    # ---------------- accounting ----------------------------------- #
+    def stats(self) -> DeploymentStats:
+        return self._live_router().stats()
+
+    def stats_global(self) -> DeploymentStats:
+        router = self._live_router()
+        if hasattr(router, "stats_global"):
+            return router.stats_global()
+        return router.stats()
+
+    def report(self) -> DeploymentReport:
+        """Multi-app Tables II–VI composition (+ served stats when the
+        router has run). On a distributed fleet this is a collective —
+        the served side gathers across hosts like every other verb."""
+        if self._closed:
+            raise RuntimeError("deployment is closed")
+        served = None
+        if self.router is not None and self.router.steps:
+            served = self.stats_global() if self.is_distributed \
+                else self.stats()
+        return deployment_report(
+            {name: m.chip for name, m in self._members.items()},
+            self.n_chips, served)
+
+    # ---------------- the live weight swap ------------------------- #
+    def reprogram(self, app: str, params) -> None:
+        """Swap ONE tenant's weights with no recompile of the fabric:
+        re-encode tile state for the same compiled topology
+        (:func:`repro.chip.reprogram_chip` — map/route untouched,
+        ``compile_count`` unchanged) and re-place the plan on the mesh.
+        The other tenants' lanes never notice; in-flight lanes of this
+        app see the new weights from their next item on — §III.D
+        program-once, made a live operation. Call between engine
+        steps."""
+        m = self._streaming_member(app)
+        # weight_bits/device/r_seg ride on the chip itself
+        # (CompiledChip.program_kw) — the swap re-encodes exactly the
+        # way the compile did
+        kw = {"spec": m.mlp_spec} if m.mlp_spec is not None else {}
+        m.sharded.reprogram(params, **kw)
+        m.chip = m.sharded.chip
+
+    def close(self) -> None:
+        """Tear the deployment down: drop plan/mesh references so
+        device buffers free, and refuse further verbs."""
+        if self._closed:
+            return
+        self._closed = True
+        self._members.clear()
+        self.router = None
+        self.mesh = None
+
+    def __enter__(self) -> "Deployment":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __repr__(self) -> str:
+        if self._closed:
+            return "Deployment[closed]"
+        kinds = [f"{name}:{m.spec.system}"
+                 + ("" if m.sharded is not None else "(analytic)")
+                 for name, m in self._members.items()]
+        return (f"Deployment[{', '.join(kinds)} on {self.n_chips} "
+                f"chip(s){' (distributed)' if self.is_distributed else ''}]")
+
+
+def deploy(spec: Union[DeploymentSpec, Sequence[AppSpec], AppSpec],
+           **kw) -> Deployment:
+    """THE entry point: declarative spec in, live fabric out.
+
+    Accepts a full :class:`DeploymentSpec`, a sequence of
+    :class:`AppSpec`, or one bare :class:`AppSpec`; ``**kw`` (n_chips,
+    mesh, queue_limit, use_kernel, strict_rate) build the
+    DeploymentSpec in the shorthand forms.
+    """
+    if isinstance(spec, AppSpec):
+        spec = DeploymentSpec(apps=(spec,), **kw)
+    elif not isinstance(spec, DeploymentSpec):
+        spec = DeploymentSpec(apps=tuple(spec), **kw)
+    elif kw:
+        raise ValueError("deploy: pass topology kwargs inside the "
+                         "DeploymentSpec, not alongside it")
+    return Deployment(spec)

@@ -1,0 +1,78 @@
+"""Multi-app deployment accounting: Tables II–VI, composed per tenant.
+
+Co-residency composes linearly on the hardware side: each app's
+programmed cores occupy their own slice of every fleet chip, so the
+deployment's area/power/core inventory is the per-app chip reports
+summed (× fleet size), exactly the way Tables II–VI sum independent
+benchmarks over one core design. The served side is whatever the
+multi-app router measured — carried per app AND as the fleet roll-up,
+never re-derived from the analytic envelope.
+"""
+from __future__ import annotations
+
+import dataclasses
+import types
+from typing import Dict, Mapping, Optional
+
+from repro.fleet.report import FleetReport, fleet_report
+
+
+@dataclasses.dataclass(frozen=True)
+class DeploymentReport:
+    """Per-app fleet reports plus the co-resident roll-up."""
+    n_chips: int
+    apps: Dict[str, FleetReport]
+    # linear co-residency roll-up (Σ over apps of the per-app fleet)
+    cores: int
+    area_mm2: float
+    power_mw: float
+    capacity_items_per_second: float
+    # measured serving roll-up (None for analytic-only reports)
+    served: Optional[object] = None     # DeploymentStats
+    served_fraction_of_capacity: Optional[float] = None
+
+    def __str__(self) -> str:
+        head = (f"DeploymentReport[{len(self.apps)} app(s) on "
+                f"{self.n_chips} chip(s): {self.cores} cores, "
+                f"{self.area_mm2:.3f} mm2, {self.power_mw:.3f} mW, "
+                f"capacity {self.capacity_items_per_second:.3g} "
+                f"items/s]")
+        lines = [f"  {name:>12s}: {rep.n_chips}x {rep.chip.system} "
+                 f"{rep.chip.cores} cores, {rep.area_mm2:.3f} mm2, "
+                 f"{rep.power_mw:.3f} mW"
+                 for name, rep in self.apps.items()]
+        if self.served is not None:
+            lines.append(f"  served: {self.served.fleet}"
+                         + (f" ({self.served_fraction_of_capacity:.2%}"
+                            f" of analytic capacity)"
+                            if self.served_fraction_of_capacity
+                            is not None else ""))
+        return "\n".join([head] + lines)
+
+
+def deployment_report(chips: Mapping[str, object], n_chips: int,
+                      served=None) -> DeploymentReport:
+    """Compose the multi-app report from ``{app: CompiledChip}``.
+
+    Pure in the chips (no devices touched — the golden suite pins these
+    numbers without building a mesh); ``served`` is a live router's
+    :class:`repro.deploy.DeploymentStats`, folded in when given.
+    """
+    apps = {}
+    for name, chip in chips.items():
+        member = types.SimpleNamespace(chip=chip, n_chips=n_chips)
+        apps[name] = fleet_report(member)
+    cap = sum(r.capacity_items_per_second for r in apps.values())
+    served_fleet = served.fleet if served is not None else None
+    return DeploymentReport(
+        n_chips=n_chips,
+        apps=apps,
+        cores=sum(r.cores for r in apps.values()),
+        area_mm2=sum(r.area_mm2 for r in apps.values()),
+        power_mw=sum(r.power_mw for r in apps.values()),
+        capacity_items_per_second=cap,
+        served=served,
+        served_fraction_of_capacity=(
+            served_fleet.items_per_second / cap
+            if served_fleet is not None and cap else None),
+    )

@@ -1,0 +1,245 @@
+"""The multi-app continuous-batching router.
+
+This is :class:`repro.fleet.FleetRouter`'s single ``_stream_batch``
+generalized to co-resident tenants: every app owns a block of lanes
+(tagged by app name), and each engine step dispatches each app's
+``(lanes_app, d_in_app)`` batch to THAT app's programmed plan — the
+plans all placed once on the one shared ``"chip"`` mesh
+(:func:`repro.fleet.replicate_to_mesh` via per-app
+:class:`repro.fleet.ShardedChip` members), so one batched step per app
+per engine step runs the whole multi-tenant fleet with zero
+re-programming traffic.
+
+:class:`DistributedMultiAppRouter` is the SPMD shape: every process
+routes its own chips' lanes for EVERY app, in lockstep — each app's
+batched step is a collective, so the per-step dispatch schedule is
+pinned (every app, declaration order, idle or not), and the serve/stop
+decision and the stats roll-up reduce across hosts exactly like the
+single-app distributed router.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Mapping, Optional
+
+import numpy as np
+
+from repro.fleet.router import (LockstepDrainMixin, RouterStats,
+                                TimedStepMixin, any_across_hosts,
+                                gather_global_stats, latency_arrays,
+                                stats_from_states, stream_member)
+from repro.serving.engine import (ItemRequest, KeyedItemStreamScheduler,
+                                  StreamSpec)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeploymentStats:
+    """Per-app rows plus the fleet-wide roll-up, from the same engine
+    counters — the per-app requests/items/rejected/lanes sum EXACTLY
+    to the fleet row by construction (asserted in the selftest)."""
+    apps: Dict[str, RouterStats]
+    fleet: RouterStats
+
+    def __str__(self) -> str:
+        lines = [f"  {name:>12s}: {stats}"
+                 for name, stats in self.apps.items()]
+        return "\n".join([f"DeploymentStats[fleet: {self.fleet}]"]
+                         + lines)
+
+
+class MultiAppRouter(TimedStepMixin, KeyedItemStreamScheduler):
+    """Keyed StreamingEngine over ``{app: member}`` fleet members that
+    share one mesh (each member: a :class:`repro.fleet.ShardedChip`,
+    or anything with ``stream_host(batch)``/``d_in``).
+
+    ``lanes``/``queue_limits`` are per-app budgets. Requests must carry
+    ``key=app_name`` (:meth:`submit_app` stamps it).
+    """
+
+    def __init__(self, members: Mapping[str, Any], *,
+                 lanes: Mapping[str, int],
+                 queue_limits: Optional[Mapping[str, Optional[int]]] = None,
+                 use_kernel: bool = False,
+                 step_when_idle: bool = False):
+        if not members:
+            raise ValueError("MultiAppRouter needs at least one member")
+        queue_limits = queue_limits or {}
+        streams = {}
+        for name, member in members.items():
+            chip = getattr(member, "chip", member)
+            if getattr(chip, "plan", 1) is None:
+                raise ValueError(
+                    f"app {name!r} is analytic-only (compiled without "
+                    "weights): report() works, but it cannot join a "
+                    "streaming router")
+            streams[name] = StreamSpec(member.d_in, lanes[name],
+                                       queue_limits.get(name))
+        super().__init__(streams, step_when_idle=step_when_idle)
+        self.members = dict(members)
+        self.use_kernel = use_kernel
+        self._uid = 0
+
+    # ---------------- payload ------------------------------------- #
+    _local_stream = False        # distributed variant flips this
+
+    def _stream_batch_key(self, key, batch: np.ndarray) -> np.ndarray:
+        return stream_member(self.members[key], batch,
+                             use_kernel=self.use_kernel,
+                             local=self._local_stream)
+
+    # ---------------- submission ----------------------------------- #
+    def submit_app(self, app: str, items) -> Optional[ItemRequest]:
+        """Wrap ``items`` into a request tagged for ``app`` and submit
+        it; returns the request, or None if the app's admission queue
+        refused it (backpressure)."""
+        if app not in self.members:
+            raise ValueError(f"unknown app {app!r} (deployed: "
+                             f"{sorted(self.members)})")
+        req = ItemRequest(uid=self._uid, items=items, key=app)
+        self._uid += 1
+        return req if self.submit(req) else None
+
+    # ---------------- the closed serving loop ---------------------- #
+    def serve(self, sources: Mapping[str, Any], *,
+              max_steps: int = 100_000) -> List:
+        """Drain one bounded source per app under backpressure — the
+        multi-tenant shape of :meth:`repro.fleet.FleetRouter.serve`:
+        pump every source, admit as much as each app's admission queue
+        accepts (rejected requests stay queued at their source), run
+        one keyed engine step; stop when nothing is queued, active or
+        un-pumped anywhere. Returns the finished states (all apps;
+        each state's ``request.key`` says whose)."""
+        unknown = set(sources) - set(self.members)
+        if unknown:
+            raise ValueError(f"serve: sources for unknown apps "
+                             f"{sorted(unknown)}")
+        for name in sources:
+            limit = self._streams[name].queue_limit
+            if limit is not None and limit < 1:
+                raise ValueError(
+                    f"serve: app {name!r} has queue_limit 0 — a "
+                    "zero-capacity admission queue can never admit a "
+                    "request, so the serve loop could not make "
+                    "progress")
+        for _ in range(max_steps):
+            for name, src in sources.items():
+                src.pump()
+                while True:
+                    req = src.peek()
+                    if req is None:
+                        break
+                    if req.key is None:
+                        req.key = name
+                    elif req.key != name:
+                        raise ValueError(
+                            f"serve: source for app {name!r} produced "
+                            f"a request tagged {req.key!r}")
+                    if not self.submit(req):
+                        break
+                    src.take()
+            decision = self._serve_decision(sources)
+            if decision == "stop":
+                break
+            if decision == "step":
+                self.step()
+        return self.finished
+
+    def _serve_decision(self, sources) -> str:
+        if self.queue or self.active:
+            return "step"
+        if all(src.exhausted for src in sources.values()):
+            return "stop"
+        for src in sources.values():
+            src.pump()
+        if all(src.peek() is None for src in sources.values()):
+            return "stop"               # sources dry, nothing queued
+        return "skip"
+
+    # ---------------- accounting ----------------------------------- #
+    def _finished_for(self, app: str) -> list:
+        return [st for st in self.finished if st.request.key == app]
+
+    def stats_app(self, app: str) -> RouterStats:
+        """One tenant's row (lanes/occupancy against ITS budget)."""
+        return stats_from_states(self._finished_for(app),
+                                 items=self.items_by_key[app],
+                                 steps=self.steps,
+                                 wall_s=self._wall_s(),
+                                 lanes=self._streams[app].lanes,
+                                 rejected=self.rejected_by_key[app])
+
+    def stats(self) -> DeploymentStats:
+        fleet = stats_from_states(self.finished,
+                                  items=self.items_emitted,
+                                  steps=self.steps,
+                                  wall_s=self._wall_s(),
+                                  lanes=self.slots,
+                                  rejected=self.rejected)
+        return DeploymentStats(
+            apps={name: self.stats_app(name) for name in self.members},
+            fleet=fleet)
+
+
+class DistributedMultiAppRouter(LockstepDrainMixin, MultiAppRouter):
+    """The multi-app router's SPMD-lockstep shape (see module doc).
+
+    Every process of the ``jax.distributed`` job constructs one over
+    the same members (whose shared mesh spans the processes) and drives
+    it with the same call sequence. ``step_when_idle`` is forced on —
+    per-app batched steps are collectives in declaration order, and an
+    idle rank skipping one would deadlock the ranks still serving that
+    app.
+    """
+
+    def __init__(self, members, *, lanes, queue_limits=None,
+                 use_kernel: bool = False, step_when_idle: bool = True):
+        if not step_when_idle:
+            raise ValueError(
+                "DistributedMultiAppRouter always steps when idle: "
+                "every app's batched step is a collective, and a "
+                "locally idle rank that skipped one would deadlock "
+                "the ranks that still have traffic")
+        for name, member in members.items():
+            if not getattr(member, "is_distributed", False):
+                raise ValueError(
+                    f"app {name!r}: member's mesh does not span "
+                    "processes; on one process use MultiAppRouter")
+        super().__init__(members, lanes=lanes, queue_limits=queue_limits,
+                         use_kernel=use_kernel, step_when_idle=True)
+
+    # (local lanes, d_in) → (local lanes, d_out): each rank
+    # contributes its lanes' rows and reads back its own shards
+    _local_stream = True
+
+    def _serve_decision(self, sources) -> str:
+        more = bool(self.queue or self.active or
+                    not all(s.exhausted for s in sources.values()))
+        return "step" if any_across_hosts(more) else "stop"
+
+    def stats_global(self) -> DeploymentStats:
+        """Exact fleet-wide per-app + roll-up stats (collective: every
+        rank must call together). Each app's counters and raw
+        latencies gather separately, in declaration order, then the
+        fleet row gathers the totals — percentiles are computed over
+        every finished request in the fleet, never merged from
+        per-host percentiles."""
+        import jax
+
+        if jax.process_count() == 1:
+            return self.stats()
+        wall = self._wall_s()
+        apps = {}
+        for name in self.members:
+            fin = self._finished_for(name)
+            lat, wait = latency_arrays(fin)
+            apps[name] = gather_global_stats(
+                lat, wait, requests=len(fin),
+                items=self.items_by_key[name], steps=self.steps,
+                rejected=self.rejected_by_key[name],
+                lanes=self._streams[name].lanes, wall_s=wall)
+        lat, wait = latency_arrays(self.finished)
+        fleet = gather_global_stats(
+            lat, wait, requests=len(self.finished),
+            items=self.items_emitted, steps=self.steps,
+            rejected=self.rejected, lanes=self.slots, wall_s=wall)
+        return DeploymentStats(apps=apps, fleet=fleet)

@@ -1,0 +1,119 @@
+"""Declarative deployment specs.
+
+The paper's processor is explicitly multi-application — Tables II–VI
+size the SAME core/fabric design for five sensor benchmarks — but until
+now serving one app meant hand-wiring four modules (``compile_chip`` →
+``shard_chip`` → ``FleetRouter`` → ``StreamSource``), and serving two
+meant doing it twice with nothing shared. A :class:`DeploymentSpec`
+says WHAT should run — which apps, on which system, at what rate, with
+what lane/admission budget — and one fabric topology for all of them;
+:func:`repro.deploy.deploy` turns it into a live
+:class:`repro.deploy.Deployment`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+from repro.core.systems import normalize_system
+
+
+@dataclasses.dataclass(frozen=True)
+class AppSpec:
+    """One tenant application.
+
+    ``network`` is one of
+      * a paper app name (``repro.configs.paper_apps.APPS`` key, e.g.
+        ``"deep"``) — single-net apps get deterministic ``mlp_init``
+        weights (``seed``) unless ``params`` overrides them, so they
+        stream out of the box; multi-net apps (edge, motion) deploy
+        analytic-only (report works, stream raises);
+      * an :class:`repro.core.MLPSpec` — pass ``params`` to stream,
+        omit for analytic-only;
+      * a :class:`repro.core.ProgrammedMLP` — already-programmed state.
+
+    ``system`` accepts any alias (``"memristor"``/``"1t1m"`` /
+    ``"digital"``/``"sram"``); ``items_per_second`` is the tenant's SLO
+    (validated against the routed TDM fabric × fleet at deploy time);
+    ``lanes_per_chip`` × fleet chips is the tenant's lane budget and
+    ``queue_limit`` its admission bound (None → the deployment-wide
+    default). ``analytic=True`` deploys a report-only tenant — no
+    weight synthesis, no tile programming — for sizing studies that
+    never stream.
+    """
+    name: str
+    network: Any
+    params: Any = None
+    system: str = "memristor"
+    items_per_second: float = 0.0
+    lanes_per_chip: int = 4
+    queue_limit: Optional[int] = None
+    seed: int = 0
+    weight_bits: int = 8
+    analytic: bool = False
+
+    def __post_init__(self):
+        if not self.name or not isinstance(self.name, str):
+            raise ValueError("AppSpec: every app needs a non-empty "
+                             "string name")
+        if self.lanes_per_chip < 1:
+            raise ValueError(f"AppSpec {self.name!r}: lanes_per_chip "
+                             "must be >= 1")
+        if self.analytic and self.params is not None:
+            raise ValueError(f"AppSpec {self.name!r}: analytic=True "
+                             "is report-only — params would never be "
+                             "programmed")
+        # normalize eagerly so a bad alias fails at spec build, not
+        # mid-deploy
+        object.__setattr__(self, "system",
+                           normalize_system(self.system,
+                                            context=f"AppSpec "
+                                                    f"{self.name!r}"))
+
+
+@dataclasses.dataclass(frozen=True)
+class DeploymentSpec:
+    """A set of apps plus ONE fabric topology they co-reside on.
+
+    ``n_chips`` sizes a fresh single-process ``"chip"`` mesh (default:
+    every visible device); pass ``mesh`` instead to reuse a launcher
+    mesh — including a ``make_distributed_fleet_mesh`` spanning
+    ``jax.distributed`` processes, which makes every verb on the
+    resulting deployment SPMD-lockstep. ``queue_limit`` is the default
+    per-app admission bound; ``strict_rate`` turns infeasible per-app
+    SLOs into errors instead of :class:`repro.chip.ChipRateWarning`.
+    """
+    apps: Tuple[AppSpec, ...]
+    n_chips: Optional[int] = None
+    mesh: Any = None
+    queue_limit: Optional[int] = None
+    use_kernel: bool = False
+    strict_rate: bool = False
+
+    def __post_init__(self):
+        apps = tuple(self.apps)
+        object.__setattr__(self, "apps", apps)
+        if not apps:
+            raise ValueError("DeploymentSpec: at least one AppSpec")
+        names = [a.name for a in apps]
+        dupes = {n for n in names if names.count(n) > 1}
+        if dupes:
+            raise ValueError(f"DeploymentSpec: duplicate app names "
+                             f"{sorted(dupes)}")
+        if self.mesh is not None and self.n_chips is not None:
+            raise ValueError("DeploymentSpec: pass n_chips OR mesh, "
+                             "not both (the mesh fixes the chip count)")
+
+
+def single_app(network, params=None, *, name: str = "app",
+               system: str = "memristor", n_chips: Optional[int] = None,
+               **kw) -> DeploymentSpec:
+    """Shorthand for the one-tenant spec (the legacy
+    compile→shard→route path as one call)."""
+    app_kw = {k: kw.pop(k) for k in
+              ("items_per_second", "lanes_per_chip", "queue_limit",
+               "seed", "weight_bits", "analytic") if k in kw}
+    return DeploymentSpec(
+        apps=(AppSpec(name, network, params=params, system=system,
+                      **app_kw),),
+        n_chips=n_chips, **kw)

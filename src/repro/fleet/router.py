@@ -65,6 +65,39 @@ class RouterStats:
                 f"{self.latency_s_p95 * 1e3:.1f} ms]")
 
 
+def latency_arrays(finished):
+    """Per-request (latency, wait) vectors over finished states — the
+    one place the extraction idiom lives (stats, merges, gathers)."""
+    lat = np.asarray([st.latency_s for st in finished]) \
+        if finished else np.zeros((0,))
+    wait = np.asarray([st.wait_s for st in finished]) \
+        if finished else np.zeros((0,))
+    return lat, wait
+
+
+def stats_from_states(finished, *, items: int, steps: int, wall_s: float,
+                      lanes: int, rejected: int) -> RouterStats:
+    """Assemble one :class:`RouterStats` from finished request states
+    plus the engine counters — the one formula behind the single-app
+    router, the multi-app router's per-tenant rows and its fleet
+    roll-up (so per-app and fleet numbers can never drift apart)."""
+    lat, wait = latency_arrays(finished)
+    return RouterStats(
+        requests=len(finished),
+        items=items,
+        steps=steps,
+        wall_s=wall_s,
+        items_per_second=items / wall_s if wall_s else 0.0,
+        occupancy=items / max(steps * lanes, 1),
+        wait_s_mean=float(wait.mean()) if wait.size else 0.0,
+        latency_s_mean=float(lat.mean()) if lat.size else 0.0,
+        latency_s_p50=float(np.percentile(lat, 50)) if lat.size else 0.0,
+        latency_s_p95=float(np.percentile(lat, 95)) if lat.size else 0.0,
+        rejected=rejected,
+        lanes=lanes,
+    )
+
+
 def merge_stats(stats: Sequence[RouterStats]) -> RouterStats:
     """Pure (no-communication) roll-up of per-host RouterStats.
 
@@ -107,7 +140,59 @@ def merge_stats(stats: Sequence[RouterStats]) -> RouterStats:
     )
 
 
-class FleetRouter(ItemStreamScheduler):
+class TimedStepMixin:
+    """Wall-clock stamping shared by every router engine (single-app
+    and multi-app): the first step starts the clock, every step moves
+    the last-step stamp, ``_wall_s`` is the span the throughput and
+    occupancy numbers divide by."""
+
+    _t_start: Optional[float] = None
+    _t_last: float = 0.0
+
+    def step(self) -> int:
+        if self._t_start is None:
+            self._t_start = time.perf_counter()
+        emitted = super().step()
+        self._t_last = time.perf_counter()
+        return emitted
+
+    def _wall_s(self) -> float:
+        return (self._t_last - self._t_start) \
+            if self._t_start is not None else 0.0
+
+
+def stream_member(member, batch: np.ndarray, *,
+                  use_kernel: bool = False,
+                  local: bool = False) -> np.ndarray:
+    """Host-side dispatch to a fleet member's preferred stream verb:
+    ``stream_local`` on a distributed mesh (each rank's own rows),
+    else the host-to-host ``stream_host`` when the payload offers one
+    (going through a jax-array return would add a device round-trip
+    per engine step), else plain ``stream``."""
+    if local:
+        return member.stream_local(batch, use_kernel=use_kernel)
+    host = getattr(member, "stream_host", None)
+    if host is not None:
+        return host(batch, use_kernel=use_kernel)
+    return np.asarray(member.stream(batch, use_kernel=use_kernel))
+
+
+class LockstepDrainMixin:
+    """Drain loop for SPMD routers: the local "anything left?" test is
+    replaced by an all-hosts OR so every rank executes the same number
+    of collective steps and breaks on the same iteration."""
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List:
+        steps = 0
+        while steps < max_steps:
+            if not any_across_hosts(bool(self.queue or self.active)):
+                break
+            self.step()
+            steps += 1
+        return self.finished
+
+
+class FleetRouter(TimedStepMixin, ItemStreamScheduler):
     """StreamingEngine over a :class:`repro.fleet.ShardedChip` (or any
     payload with ``.stream(batch)`` and ``.d_in`` — a bare
     ``CompiledChip`` is a 1-chip fleet)."""
@@ -139,8 +224,6 @@ class FleetRouter(ItemStreamScheduler):
         self.n_chips = n_chips
         self.lanes_per_chip = lanes_per_chip
         self.use_kernel = use_kernel
-        self._t_start: Optional[float] = None
-        self._t_last: float = 0.0
 
     @staticmethod
     def _lane_chips(fleet) -> int:
@@ -150,22 +233,8 @@ class FleetRouter(ItemStreamScheduler):
 
     # ---------------- payload ------------------------------------- #
     def _stream_batch(self, batch: np.ndarray) -> np.ndarray:
-        # host-to-host path when the payload offers one (ShardedChip
-        # scatters the host batch into the chip layout itself; going
-        # through a jax-array return would add a device round-trip
-        # per engine step)
-        host = getattr(self.fleet, "stream_host", None)
-        if host is not None:
-            return host(batch, use_kernel=self.use_kernel)
-        return np.asarray(self.fleet.stream(batch,
-                                            use_kernel=self.use_kernel))
-
-    def step(self) -> int:
-        if self._t_start is None:
-            self._t_start = time.perf_counter()
-        emitted = super().step()
-        self._t_last = time.perf_counter()
-        return emitted
+        return stream_member(self.fleet, batch,
+                             use_kernel=self.use_kernel)
 
     # ---------------- the closed serving loop ---------------------- #
     def serve(self, source, *,
@@ -217,39 +286,18 @@ class FleetRouter(ItemStreamScheduler):
 
     # ---------------- accounting ----------------------------------- #
     def _latency_arrays(self):
-        lat = np.asarray([st.latency_s for st in self.finished]) \
-            if self.finished else np.zeros((0,))
-        wait = np.asarray([st.wait_s for st in self.finished]) \
-            if self.finished else np.zeros((0,))
-        return lat, wait
-
-    def _wall_s(self) -> float:
-        return (self._t_last - self._t_start) \
-            if self._t_start is not None else 0.0
+        return latency_arrays(self.finished)
 
     def stats(self) -> RouterStats:
-        lat, wait = self._latency_arrays()
-        wall = self._wall_s()
-        return RouterStats(
-            requests=len(self.finished),
-            items=self.items_emitted,
-            steps=self.steps,
-            wall_s=wall,
-            items_per_second=self.items_emitted / wall if wall else 0.0,
-            occupancy=self.items_emitted / max(self.steps * self.slots,
-                                               1),
-            wait_s_mean=float(wait.mean()) if wait.size else 0.0,
-            latency_s_mean=float(lat.mean()) if lat.size else 0.0,
-            latency_s_p50=float(np.percentile(lat, 50))
-            if lat.size else 0.0,
-            latency_s_p95=float(np.percentile(lat, 95))
-            if lat.size else 0.0,
-            rejected=self.rejected,
-            lanes=self.slots,
-        )
+        return stats_from_states(self.finished,
+                                 items=self.items_emitted,
+                                 steps=self.steps,
+                                 wall_s=self._wall_s(),
+                                 lanes=self.slots,
+                                 rejected=self.rejected)
 
 
-class DistributedFleetRouter(FleetRouter):
+class DistributedFleetRouter(LockstepDrainMixin, FleetRouter):
     """The router's SPMD shape for a fleet whose mesh spans processes.
 
     EVERY process of the ``jax.distributed`` job constructs one of
@@ -300,31 +348,12 @@ class DistributedFleetRouter(FleetRouter):
     def _stream_batch(self, batch: np.ndarray) -> np.ndarray:
         # (local slots, d_in) → (local slots, d_out): each rank
         # contributes its lanes' rows and reads back its own shards
-        return self.fleet.stream_local(batch,
-                                       use_kernel=self.use_kernel)
+        return stream_member(self.fleet, batch,
+                             use_kernel=self.use_kernel, local=True)
 
     # ---------------- lockstep control plane ----------------------- #
     def _any_across_hosts(self, flag: bool) -> bool:
-        """OR-reduce a python bool over all hosts (one tiny gloo
-        allgather; every rank must call this together)."""
-        import jax
-
-        if jax.process_count() == 1:
-            return bool(flag)
-        from jax.experimental import multihost_utils
-        flags = multihost_utils.process_allgather(
-            np.asarray([1 if flag else 0], np.int32))
-        return bool(np.asarray(flags).sum() > 0)
-
-    def run_until_drained(self, max_steps: int = 10_000) -> List:
-        steps = 0
-        while steps < max_steps:
-            if not self._any_across_hosts(bool(self.queue or
-                                               self.active)):
-                break
-            self.step()
-            steps += 1
-        return self.finished
+        return any_across_hosts(flag)
 
     def _serve_decision(self, source) -> str:
         """The fleet-wide continue/stop decision: the serve loop runs
@@ -350,54 +379,98 @@ class DistributedFleetRouter(FleetRouter):
 
         if jax.process_count() == 1:
             return self.stats()
-        from jax.experimental import multihost_utils
-
-        # int32/float32 on the wire: the default CPU client is x32
-        # (an int64 input would be silently downcast), and float32
-        # keeps ~0.1 µs resolution on second-scale latencies. Counters
-        # ride as (hi, lo) int32 halves so a long-lived fleet — days at
-        # the benchmarked items/s — cannot overflow the gather.
         lat, wait = self._latency_arrays()
-        counts = np.asarray([len(self.finished), self.items_emitted,
-                             self.steps, self.rejected, self.slots],
-                            np.int64)
-        halves = np.stack([counts >> 31,
-                           counts & 0x7FFFFFFF]).astype(np.int32)
-        walls = np.asarray([self._wall_s()], np.float32)
-        halves_all = np.asarray(
-            multihost_utils.process_allgather(halves)).astype(np.int64)
-        counts_all = (halves_all[:, 0, :] << 31) | halves_all[:, 1, :]
-        walls_all = np.asarray(multihost_utils.process_allgather(walls))
+        return gather_global_stats(
+            lat, wait, requests=len(self.finished),
+            items=self.items_emitted, steps=self.steps,
+            rejected=self.rejected, lanes=self.slots,
+            wall_s=self._wall_s())
 
-        n_max = int(counts_all[:, 0].max())
-        pad = np.full((2, n_max), np.nan, np.float32)
-        pad[0, :lat.size] = lat
-        pad[1, :wait.size] = wait
-        gathered = np.asarray(multihost_utils.process_allgather(pad)) \
-            if n_max else np.zeros((1, 2, 0))
-        lat_all = gathered[:, 0, :].ravel()
-        wait_all = gathered[:, 1, :].ravel()
-        lat_all = lat_all[~np.isnan(lat_all)]
-        wait_all = wait_all[~np.isnan(wait_all)]
 
-        requests = int(counts_all[:, 0].sum())
-        items = int(counts_all[:, 1].sum())
-        lane_steps = int((counts_all[:, 2] * counts_all[:, 4]).sum())
-        wall = float(walls_all.max())
-        return RouterStats(
-            requests=requests,
-            items=items,
-            steps=int(counts_all[:, 2].max()),
-            wall_s=wall,
-            items_per_second=items / wall if wall else 0.0,
-            occupancy=items / lane_steps if lane_steps else 0.0,
-            wait_s_mean=float(wait_all.mean()) if wait_all.size else 0.0,
-            latency_s_mean=float(lat_all.mean()) if lat_all.size
-            else 0.0,
-            latency_s_p50=float(np.percentile(lat_all, 50))
-            if lat_all.size else 0.0,
-            latency_s_p95=float(np.percentile(lat_all, 95))
-            if lat_all.size else 0.0,
-            rejected=int(counts_all[:, 3].sum()),
-            lanes=int(counts_all[:, 4].sum()),
-        )
+# ------------------------------------------------------------------- #
+# cross-host primitives (shared with repro.deploy's multi-app router)
+# ------------------------------------------------------------------- #
+def any_across_hosts(flag: bool) -> bool:
+    """OR-reduce a python bool over all hosts (one tiny gloo
+    allgather; every rank must call this together)."""
+    import jax
+
+    if jax.process_count() == 1:
+        return bool(flag)
+    from jax.experimental import multihost_utils
+    flags = multihost_utils.process_allgather(
+        np.asarray([1 if flag else 0], np.int32))
+    return bool(np.asarray(flags).sum() > 0)
+
+
+def allgather_i64(counts: np.ndarray) -> np.ndarray:
+    """Allgather a (n,) int64 counter vector → (hosts, n).
+
+    int32 on the wire: the default CPU client is x32 (an int64 input
+    would be silently downcast), so counters ride as (hi, lo) int32
+    halves — a long-lived fleet, days at the benchmarked items/s,
+    cannot overflow the gather."""
+    from jax.experimental import multihost_utils
+
+    counts = np.asarray(counts, np.int64)
+    halves = np.stack([counts >> 31,
+                       counts & 0x7FFFFFFF]).astype(np.int32)
+    halves_all = np.asarray(
+        multihost_utils.process_allgather(halves)).astype(np.int64)
+    return (halves_all[:, 0, :] << 31) | halves_all[:, 1, :]
+
+
+def allgather_latencies(lat: np.ndarray, wait: np.ndarray,
+                        n_max: int):
+    """Allgather per-request latency/wait vectors, NaN-padded to the
+    fleet-wide max request count ``n_max`` (float32 on the wire keeps
+    ~0.1 µs resolution on second-scale latencies). Returns the
+    concatenated fleet-wide (lat, wait) with padding stripped."""
+    from jax.experimental import multihost_utils
+
+    pad = np.full((2, n_max), np.nan, np.float32)
+    pad[0, :lat.size] = lat
+    pad[1, :wait.size] = wait
+    gathered = np.asarray(multihost_utils.process_allgather(pad)) \
+        if n_max else np.zeros((1, 2, 0))
+    lat_all = gathered[:, 0, :].ravel()
+    wait_all = gathered[:, 1, :].ravel()
+    return lat_all[~np.isnan(lat_all)], wait_all[~np.isnan(wait_all)]
+
+
+def gather_global_stats(lat: np.ndarray, wait: np.ndarray, *,
+                        requests: int, items: int, steps: int,
+                        rejected: int, lanes: int,
+                        wall_s: float) -> RouterStats:
+    """Assemble the exact cross-host :class:`RouterStats` for one
+    stream's local numbers (collective: every rank must call together,
+    with the same sequence of streams)."""
+    counts = np.asarray([requests, items, steps, rejected, lanes],
+                        np.int64)
+    counts_all = allgather_i64(counts)
+    from jax.experimental import multihost_utils
+    walls_all = np.asarray(multihost_utils.process_allgather(
+        np.asarray([wall_s], np.float32)))
+
+    n_max = int(counts_all[:, 0].max())
+    lat_all, wait_all = allgather_latencies(lat, wait, n_max)
+
+    total_items = int(counts_all[:, 1].sum())
+    lane_steps = int((counts_all[:, 2] * counts_all[:, 4]).sum())
+    wall = float(walls_all.max())
+    return RouterStats(
+        requests=int(counts_all[:, 0].sum()),
+        items=total_items,
+        steps=int(counts_all[:, 2].max()),
+        wall_s=wall,
+        items_per_second=total_items / wall if wall else 0.0,
+        occupancy=total_items / lane_steps if lane_steps else 0.0,
+        wait_s_mean=float(wait_all.mean()) if wait_all.size else 0.0,
+        latency_s_mean=float(lat_all.mean()) if lat_all.size else 0.0,
+        latency_s_p50=float(np.percentile(lat_all, 50))
+        if lat_all.size else 0.0,
+        latency_s_p95=float(np.percentile(lat_all, 95))
+        if lat_all.size else 0.0,
+        rejected=int(counts_all[:, 3].sum()),
+        lanes=int(counts_all[:, 4].sum()),
+    )

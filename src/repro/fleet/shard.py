@@ -41,8 +41,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.chip.compile import (CompiledChip, stream_pipeline,
-                                validate_stream_rate)
+from repro.chip.compile import (CompiledChip, reprogram_chip,
+                                stream_pipeline, validate_stream_rate,
+                                warn_once_deprecated)
 from repro.compat import make_array_from_process_local_data, shard_map
 from repro.launch.mesh import make_fleet_mesh, mesh_spans_processes
 
@@ -258,11 +259,32 @@ class ShardedChip:
     def __call__(self, x: jax.Array, **kw) -> jax.Array:
         return self.stream(x, **kw)
 
+    def reprogram(self, params, **kw) -> None:
+        """Live weight swap: re-encode ``params`` into tile state for
+        the SAME compiled fabric and re-place the plan on every mesh
+        device — map/route never run (:func:`repro.chip.reprogram_chip`)
+        and the jitted per-chip step stays warm (the new plan is the
+        same pytree structure, so no retrace). Call between engine
+        steps; in-flight lanes see the new weights on their next item,
+        exactly like re-flashing a crossbar mid-stream."""
+        self.chip = reprogram_chip(self.chip, params, **kw)
+        self._plan = replicate_to_mesh(self.chip.plan, self.mesh)
+
     def serve(self, *, lanes_per_chip: int = 4, **kw):
         """A continuous-batching router over this fleet: a
         :class:`repro.fleet.FleetRouter`, or its SPMD lockstep variant
         :class:`repro.fleet.DistributedFleetRouter` when the mesh spans
-        processes."""
+        processes.
+
+        Deprecated as a user entry point: ``repro.deploy.deploy`` wires
+        the same router from one declarative spec (and adds multi-app
+        co-residency). Semantics unchanged; warns once per process.
+        """
+        warn_once_deprecated(
+            "ShardedChip.serve",
+            "ShardedChip.serve() is deprecated as a direct entry "
+            "point; declare the fleet with repro.deploy.deploy(spec) "
+            "and use Deployment.submit/serve (same router underneath)")
         if self.is_distributed:
             from repro.fleet.router import DistributedFleetRouter
             return DistributedFleetRouter(self,

@@ -167,10 +167,16 @@ class SlotScheduler:
 @dataclasses.dataclass
 class ItemRequest:
     """A stream of items: (n_items, d_in) float array (a single
-    (d_in,) item is promoted to a 1-item stream)."""
+    (d_in,) item is promoted to a 1-item stream).
+
+    ``key`` names the payload stream this request belongs to on a
+    payload-keyed scheduler (``repro.deploy`` tags it with the app
+    name); ``None`` is the single anonymous stream every legacy engine
+    schedules."""
     uid: int
     items: np.ndarray
     t_submit: float = 0.0               # stamped by submit()
+    key: Any = None                     # payload stream (None = default)
 
 
 @dataclasses.dataclass
@@ -204,46 +210,150 @@ class ItemRequestState:
         return self.t_done - self.request.t_submit
 
 
-class ItemStreamScheduler(SlotScheduler):
-    """Slot-scheduled streaming of item sequences through ONE batched
-    stream function per engine step.
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """One payload-keyed stream: its item width, lane budget and
+    admission-queue bound (the per-tenant knobs ``repro.deploy`` maps
+    an ``AppSpec`` onto)."""
+    d_in: int
+    lanes: int
+    queue_limit: Optional[int] = None
 
-    A fixed pool of lanes, each active lane feeding the payload one
-    item per step (the paper's fixed-rate streaming discipline, §V.C),
-    all lanes evaluated in a single ``_stream_batch`` call. Free lanes
-    are padded with zeros so every step runs the one compiled
-    (slots, d_in) shape — no retracing as lanes retire. Payloads
-    implement ``_stream_batch``: the compiled chip
-    (:class:`repro.chip.ChipEngine`) and the sharded multi-chip fleet
-    (:class:`repro.fleet.FleetRouter`) both plug in here.
+
+class KeyedItemStreamScheduler(SlotScheduler):
+    """Slot-scheduled streaming of item sequences through one batched
+    stream function *per payload key* per engine step.
+
+    The slot pool is carved into contiguous per-key lane blocks
+    (``streams``: an ordered ``{key: StreamSpec}``); a request is
+    admitted only into a lane of ITS key's block, each key keeps its
+    own admission budget (``StreamSpec.queue_limit``), and one engine
+    step advances EVERY key's active lanes — each key's lanes gathered
+    into one ``(lanes_key, d_in_key)`` batch and dispatched through
+    ``_stream_batch_key(key, batch)``. Free lanes are zero-padded so
+    every step runs each key's one compiled shape — no retracing as
+    lanes retire.
+
+    With a single anonymous stream this is exactly the historic
+    single-payload scheduler (:class:`ItemStreamScheduler`, the facade
+    the chip engine and fleet router subclass); with one stream per
+    app it is the multi-tenant engine under
+    :class:`repro.deploy.MultiAppRouter`.
+
+    ``step_when_idle`` additionally pins the *dispatch schedule*: every
+    key's stream function runs on every step, idle or not, in stream
+    declaration order — the lockstep obligation of an SPMD fleet,
+    where each key's batched step is a collective all ranks must enter
+    identically.
     """
 
-    def __init__(self, d_in: int, *, slots: int = 4,
-                 queue_limit: Optional[int] = None,
-                 step_when_idle: bool = False):
-        super().__init__(slots, queue_limit=queue_limit,
+    def __init__(self, streams, *, step_when_idle: bool = False):
+        self._streams: Dict[Any, StreamSpec] = dict(streams)
+        if not self._streams:
+            raise ValueError("KeyedItemStreamScheduler needs at least "
+                             "one stream")
+        for key, spec in self._streams.items():
+            if spec.lanes < 1:
+                raise ValueError(f"stream {key!r}: needs lanes >= 1")
+        super().__init__(sum(s.lanes for s in self._streams.values()),
                          step_when_idle=step_when_idle)
-        self.d_in = d_in
-        self._batch = np.zeros((slots, d_in), np.float32)
+        self._slot_key: Dict[int, Any] = {}
+        self._base: Dict[Any, int] = {}
+        self._batches: Dict[Any, np.ndarray] = {}
+        self._queued: Dict[Any, int] = {}
+        self.items_by_key: Dict[Any, int] = {}
+        self.rejected_by_key: Dict[Any, int] = {}
+        base = 0
+        for key, spec in self._streams.items():
+            self._base[key] = base
+            for slot in range(base, base + spec.lanes):
+                self._slot_key[slot] = key
+            self._batches[key] = np.zeros((spec.lanes, spec.d_in),
+                                          np.float32)
+            self._queued[key] = 0
+            self.items_by_key[key] = 0
+            self.rejected_by_key[key] = 0
+            base += spec.lanes
 
-    def _stream_batch(self, batch: np.ndarray) -> np.ndarray:
-        """(slots, d_in) → (slots, d_out), one batched payload step."""
+    # ---------------- payload hook --------------------------------- #
+    def _stream_batch_key(self, key, batch: np.ndarray) -> np.ndarray:
+        """(lanes_key, d_in_key) → (lanes_key, d_out_key), one batched
+        payload step for one stream."""
         raise NotImplementedError
 
-    # ---------------- scheduler hooks ------------------------------ #
+    def _request_key(self, request):
+        return getattr(request, "key", None)
+
+    # ---------------- keyed admission ------------------------------ #
     def submit(self, request: ItemRequest) -> bool:
+        """Enqueue a request on its key's stream; False = that stream's
+        admission queue is full (per-tenant backpressure)."""
         if not request.t_submit:
             request.t_submit = time.perf_counter()
-        return super().submit(request)
+        key = self._request_key(request)
+        spec = self._streams.get(key)
+        if spec is None:
+            raise ValueError(
+                f"request {getattr(request, 'uid', '?')}: unknown "
+                f"stream key {key!r} (streams: "
+                f"{sorted(map(repr, self._streams))})")
+        if spec.queue_limit is not None and \
+                self._queued[key] >= spec.queue_limit:
+            self.rejected += 1
+            self.rejected_by_key[key] += 1
+            return False
+        self.queue.append(request)
+        self._queued[key] += 1
+        return True
 
+    def _admit(self) -> None:
+        # FIFO per key, and across keys as far as lane availability
+        # allows: a head-of-line request for a saturated key never
+        # blocks another key's admission. Re-pass while progress is
+        # made so a request that finishes AT admission (zero items)
+        # frees its lane for the next queued request in the same
+        # admit — the single-stream scheduler's historic behavior.
+        progress = True
+        while progress and self.queue and self.free:
+            progress = False
+            free_by_key: Dict[Any, Deque[int]] = {}
+            for slot in self.free:
+                free_by_key.setdefault(self._slot_key[slot],
+                                       deque()).append(slot)
+            waiting = list(self.queue)
+            self.queue.clear()
+            for idx, req in enumerate(waiting):
+                key = self._request_key(req)
+                lanes = free_by_key.get(key)
+                if not lanes:
+                    self.queue.append(req)
+                    continue
+                slot = lanes.popleft()
+                self.free.remove(slot)
+                self._queued[key] -= 1
+                try:
+                    st = self._begin(req, slot)
+                except BaseException:
+                    # a malformed request must cost only ITSELF: give
+                    # its lane back and re-file the untouched tail so
+                    # nothing behind it is dropped or phantom-counted
+                    self.free.append(slot)
+                    self.queue.extend(waiting[idx + 1:])
+                    raise
+                self.active[slot] = st
+                self._maybe_finish(st)
+                progress = True
+
+    # ---------------- request lifecycle ---------------------------- #
     def _begin(self, req: ItemRequest, slot: int) -> ItemRequestState:
         items = np.asarray(req.items, np.float32)
         if items.ndim == 1:
             items = items[None, :]
-        if items.shape[-1] != self.d_in:
+        d_in = self._streams[self._slot_key[slot]].d_in
+        if items.shape[-1] != d_in:
             raise ValueError(f"request {req.uid}: items have "
                              f"{items.shape[-1]} features, engine "
-                             f"streams {self.d_in}")
+                             f"streams {d_in}")
         req.items = items
         return ItemRequestState(req, slot,
                                 t_admit=time.perf_counter(),
@@ -256,21 +366,62 @@ class ItemStreamScheduler(SlotScheduler):
         st.t_done = time.perf_counter()
         st.done_step = self.steps
 
+    # ---------------- one keyed engine step ------------------------ #
     def _step_active(self) -> int:
-        self._batch[:] = 0.0
+        by_key: Dict[Any, list] = {}
         for slot, st in self.active.items():
-            self._batch[slot] = st.request.items[st.pos]
-        out = np.asarray(self._stream_batch(self._batch))
+            by_key.setdefault(self._slot_key[slot], []).append((slot, st))
+        # idle keys still dispatch under step_when_idle (see class doc)
+        keys = list(self._streams) if self.step_when_idle else \
+            [k for k in self._streams if k in by_key]
+        outs = {}
+        for key in keys:
+            batch = self._batches[key]
+            batch[:] = 0.0
+            base = self._base[key]
+            for slot, st in by_key.get(key, ()):
+                batch[slot - base] = st.request.items[st.pos]
+            outs[key] = np.asarray(self._stream_batch_key(key, batch))
         now = time.perf_counter()
         emitted = 0
-        for slot, st in list(self.active.items()):
-            st.outputs.append(out[slot])
-            if st.pos == 0:
-                st.t_first = now
-            st.pos += 1
-            emitted += 1
-            self._maybe_finish(st)
+        for key in keys:
+            out = outs[key]
+            base = self._base[key]
+            for slot, st in by_key.get(key, ()):
+                st.outputs.append(out[slot - base])
+                if st.pos == 0:
+                    st.t_first = now
+                st.pos += 1
+                emitted += 1
+                self.items_by_key[key] += 1
+                self._maybe_finish(st)
         return emitted
+
+
+class ItemStreamScheduler(KeyedItemStreamScheduler):
+    """The single-payload facade over the keyed scheduler: one
+    anonymous stream (key ``None``) spanning all ``slots`` lanes,
+    advanced through one ``_stream_batch`` call per engine step — the
+    historic contract the compiled chip
+    (:class:`repro.chip.ChipEngine`) and the sharded multi-chip fleet
+    (:class:`repro.fleet.FleetRouter`) plug into.
+    """
+
+    def __init__(self, d_in: int, *, slots: int = 4,
+                 queue_limit: Optional[int] = None,
+                 step_when_idle: bool = False):
+        super().__init__({None: StreamSpec(d_in, slots, queue_limit)},
+                         step_when_idle=step_when_idle)
+        self.d_in = d_in
+        self.queue_limit = queue_limit
+        self._batch = self._batches[None]
+
+    def _stream_batch(self, batch: np.ndarray) -> np.ndarray:
+        """(slots, d_in) → (slots, d_out), one batched payload step."""
+        raise NotImplementedError
+
+    def _stream_batch_key(self, key, batch: np.ndarray) -> np.ndarray:
+        return self._stream_batch(batch)
 
 
 # --------------------------------------------------------------------- #

@@ -1,14 +1,16 @@
 """Golden regression: Tables II–VI / fleet_report numbers, pinned.
 
-The costmodel has two consumers that must NEVER drift silently: the
+The costmodel has three consumers that must NEVER drift silently: the
 paper-reproduction benchmarks (``benchmarks/tables2to6_apps.py``
-already cross-checks ``chip.report()`` against ``specialized_cost``)
-and the fleet-report roll-up served to operators. This suite pins the
-actual NUMBERS — every paper app × {1t1m, digital} chip report, the
-RISC baselines, and the linear fleet roll-up at 3 chips — to a
-committed JSON fixture at 1e-9 relative tolerance, so a costmodel
-refactor that changes any table value must regenerate the fixture in
-the same diff (a reviewable event, not a silent drift).
+already cross-checks ``chip.report()`` against ``specialized_cost``),
+the fleet-report roll-up served to operators, and the multi-app
+``Deployment.report()`` composition over co-resident tenants. This
+suite pins the actual NUMBERS — every paper app × {1t1m, digital} chip
+report, the RISC baselines, the linear fleet roll-up at 3 chips, and a
+3-tenant deployment report — to a committed JSON fixture at 1e-9
+relative tolerance, so a costmodel refactor that changes any table
+value must regenerate the fixture in the same diff (a reviewable
+event, not a silent drift).
 
 Regenerate after an INTENDED accounting change:
 
@@ -25,12 +27,16 @@ import pytest
 from repro.chip import compile_app
 from repro.configs.paper_apps import APPS
 from repro.core.costmodel import risc_cost
+from repro.deploy import deployment_report
 from repro.fleet import fleet_report
 
 GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            "golden", "fleet_tables.json")
 SYSTEMS = ("1t1m", "digital")
 FLEET_CHIPS = 3
+# the pinned multi-tenant deployment: three paper apps co-resident on
+# one 3-chip fabric, mixing systems (and exercising the alias names)
+DEPLOY_APPS = (("deep", "1t1m"), ("ocr", "digital"), ("edge", "1t1m"))
 RTOL = 1e-9
 
 
@@ -47,7 +53,7 @@ def _jsonable(value):
 
 def compute_tables() -> dict:
     """Every number the fixture pins, from the live code paths."""
-    out = {}
+    apps = {}
     for app_id, app in APPS.items():
         row = {"risc": _jsonable(risc_cost(app))}
         for system in SYSTEMS:
@@ -59,8 +65,13 @@ def compute_tables() -> dict:
                                           n_chips=FLEET_CHIPS)
             row[f"{system}_fleet{FLEET_CHIPS}"] = _jsonable(
                 fleet_report(fleet))
-        out[app_id] = row
-    return out
+        apps[app_id] = row
+    # the multi-app Deployment.report() composition (pure in the
+    # compiled chips — no mesh/devices involved)
+    chips = {name: compile_app(APPS[name], system)
+             for name, system in DEPLOY_APPS}
+    deployment = _jsonable(deployment_report(chips, FLEET_CHIPS))
+    return {"apps": apps, "deployment": deployment}
 
 
 def _assert_close(got, want, path=""):
@@ -95,23 +106,47 @@ def live():
 
 
 def test_golden_covers_every_app_and_system(golden):
-    assert set(golden) == set(APPS)
-    for app_id, row in golden.items():
+    assert set(golden) == {"apps", "deployment"}
+    assert set(golden["apps"]) == set(APPS)
+    for app_id, row in golden["apps"].items():
         assert set(row) == {"risc", *SYSTEMS,
                             *(f"{s}_fleet{FLEET_CHIPS}"
                               for s in SYSTEMS)}
+    assert set(golden["deployment"]["apps"]) == \
+        {name for name, _ in DEPLOY_APPS}
 
 
 @pytest.mark.parametrize("app_id", sorted(APPS))
 def test_tables_match_golden(golden, live, app_id):
-    _assert_close(live[app_id], golden[app_id], path=app_id)
+    _assert_close(live["apps"][app_id], golden["apps"][app_id],
+                  path=app_id)
+
+
+def test_deployment_report_matches_golden(golden, live):
+    _assert_close(live["deployment"], golden["deployment"],
+                  path="deployment")
+
+
+def test_deployment_rollup_is_sum_of_tenants(live):
+    """The pinned deployment totals really are the per-tenant fleet
+    rows summed, and each tenant row really is that app's own pinned
+    fleet roll-up (co-residency adds nothing and hides nothing)."""
+    dep = live["deployment"]
+    for field in ("cores", "area_mm2", "power_mw",
+                  "capacity_items_per_second"):
+        assert dep[field] == pytest.approx(
+            sum(a[field] for a in dep["apps"].values()), rel=RTOL)
+    for name, system in DEPLOY_APPS:
+        pinned = live["apps"][name][f"{system}_fleet{FLEET_CHIPS}"]
+        _assert_close(dep["apps"][name], pinned,
+                      path=f"deployment.{name}")
 
 
 def test_fleet_rollup_is_linear_in_chips(live):
     """Belt and braces alongside the pins: the committed fleet numbers
     really are the chip numbers × N (catches a fixture regenerated
     against a broken roll-up)."""
-    for app_id, row in live.items():
+    for app_id, row in live["apps"].items():
         for system in SYSTEMS:
             chip_rep = row[system]
             fleet_rep = row[f"{system}_fleet{FLEET_CHIPS}"]
@@ -137,7 +172,8 @@ def _regen():
         json.dump(tables, f, indent=1, sort_keys=True)
         f.write("\n")
     print(f"wrote {GOLDEN_PATH} "
-          f"({len(tables)} apps x {len(SYSTEMS)} systems)")
+          f"({len(tables['apps'])} apps x {len(SYSTEMS)} systems + "
+          f"{len(tables['deployment']['apps'])}-tenant deployment)")
 
 
 if __name__ == "__main__":
