@@ -325,6 +325,148 @@ _FLEET_SCRIPT = textwrap.dedent("""
 
 
 # --------------------------------------------------------------------- #
+# degraded-mode throughput: lose 1 of 4 chips mid-serve (elastic resize)
+# --------------------------------------------------------------------- #
+# Subprocess for the same simulated-device reason as _fleet_serve. Each
+# round serves the same burst twice: once healthy on 4 chips end to end,
+# once losing a chip mid-drain (router.resize(3) — the same zero-compile
+# re-placement repro.fleet.ha's degraded mode uses), timing only the
+# post-loss window. The gates pin the three degraded-mode promises:
+# throughput stays proportional to surviving capacity (>= 0.6x of the
+# 3/4 expectation — the backfill scheduler must keep the surviving
+# lanes saturated, not stall on the lost ones), the resize itself
+# compiles NOTHING (compile_count delta 0), and the surviving chips'
+# outputs stay bit-exact vs the single-chip oracle (rel 0.0 — row
+# purity means losing a chip may never change any row's numbers).
+FLEET_SURVIVORS = 3
+
+_DEGRADED_SCRIPT = textwrap.dedent("""
+    import json, time
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.chip import compile_chip, compile_count
+    from repro.core.crossbar_layer import MLPSpec, mlp_init
+    from repro.fleet import FleetRouter, shard_chip
+    from repro.serving.engine import ItemRequest
+
+    DIMS = %r
+    DEVICES = %d
+    SURVIVORS = %d
+    LANES = 8
+    N_REQ = 120
+    ROUNDS = 6
+
+    spec = MLPSpec(DIMS, activation="threshold",
+                   out_activation="linear")
+    params = mlp_init(jax.random.PRNGKey(0), spec)
+    chip = compile_chip(spec, params=params)
+    rng = np.random.default_rng(0)
+    bursts = [[ItemRequest(uid=i, items=rng.uniform(
+                   0, 1, (6 + i %% 5, DIMS[0])))
+               for i in range(N_REQ)] for _ in range(ROUNDS)]
+    fleet = shard_chip(chip, DEVICES)
+    c0 = compile_count()
+
+
+    def healthy(burst):
+        fleet.resize(DEVICES)
+        router = FleetRouter(fleet, lanes_per_chip=LANES)
+        for r in burst:
+            router.submit(r)
+        t0 = time.perf_counter()
+        router.run_until_drained()
+        return router.items_emitted / (time.perf_counter() - t0)
+
+
+    def degraded(burst):
+        fleet.resize(DEVICES)
+        router = FleetRouter(fleet, lanes_per_chip=LANES)
+        for r in burst:
+            router.submit(r)
+        for _ in range(2):
+            router.step()               # lanes busy: a real mid-serve
+        at_loss = router.items_emitted  # loss, not a cold restart
+        t0 = time.perf_counter()
+        router.resize(SURVIVORS)
+        done = router.run_until_drained()
+        ips = (router.items_emitted - at_loss) / \
+            (time.perf_counter() - t0)
+        rel = 0.0
+        for st in done[-16:]:           # bit-exactness spot check
+            want = np.asarray(chip.stream(
+                jnp.asarray(st.request.items, jnp.float32)))
+            got = np.asarray(st.result)
+            denom = max(float(np.max(np.abs(want))), 1e-30)
+            rel = max(rel, float(np.max(np.abs(got - want))) / denom)
+        return ips, rel, len(done)
+
+
+    # warm both mesh shapes so neither config pays first-trace costs
+    for n in (DEVICES, SURVIVORS):
+        fleet.resize(n)
+        w = FleetRouter(fleet, lanes_per_chip=LANES)
+        w.submit(ItemRequest(uid=-1,
+                             items=rng.uniform(0, 1, (2, DIMS[0]))))
+        w.run_until_drained()
+    rounds = {"healthy": [], "degraded": []}
+    rel = 0.0
+    for burst in bursts:
+        rounds["healthy"].append(healthy(burst))
+        ips, r, n_done = degraded(burst)
+        assert n_done == N_REQ
+        rounds["degraded"].append(ips)
+        rel = max(rel, r)
+    hi, lo = max(rounds["healthy"]), max(rounds["degraded"])
+    expectation = SURVIVORS / DEVICES
+    print(json.dumps({
+        "devices": DEVICES, "survivors": SURVIVORS,
+        "lanes_per_chip": LANES, "requests": N_REQ,
+        "items_per_s_healthy": hi, "items_per_s_degraded": lo,
+        "degraded_ratio": lo / hi,
+        "capacity_expectation": expectation,
+        "degraded_vs_expected": (lo / hi) / expectation,
+        "compile_delta": compile_count() - c0,
+        "degraded_rel": rel,
+        "rounds": rounds}))
+""")
+
+
+def _fleet_degraded() -> dict:
+    print(f"\n== fleet_degraded: lose 1 of {FLEET_DEVICES} chips "
+          f"mid-serve (zero-compile resize) ==")
+    script = _DEGRADED_SCRIPT % (MLP_DIMS, FLEET_DEVICES,
+                                 FLEET_SURVIVORS)
+    try:
+        out = simdev.run_simulated(script, n_devices=FLEET_DEVICES,
+                                   timeout=900)
+    except (OSError, subprocess.TimeoutExpired) as e:
+        print(f"  fleet_degraded subprocess failed: {e!r}")
+        return {"error": repr(e), "degraded_vs_expected": 0.0}
+    if out.returncode != 0:
+        print(f"  fleet_degraded subprocess failed:\n"
+              f"{out.stderr[-2000:]}")
+        return {"error": out.stderr[-2000:],
+                "degraded_vs_expected": 0.0}
+    try:
+        res = simdev.last_json_line(out.stdout)
+    except (IndexError, ValueError) as e:
+        print(f"  fleet_degraded emitted no result: {e!r}")
+        return {"error": f"unparseable output: {out.stdout[-500:]!r}",
+                "degraded_vs_expected": 0.0}
+    print(f"  healthy  ({res['devices']} chips): "
+          f"{res['items_per_s_healthy']:8.0f} items/s")
+    print(f"  degraded ({res['survivors']} chips): "
+          f"{res['items_per_s_degraded']:8.0f} items/s "
+          f"({res['degraded_ratio']:.2f}x healthy; "
+          f"{res['degraded_vs_expected']:.2f}x of the "
+          f"{res['capacity_expectation']:.2f} capacity expectation, "
+          f"gate >= 0.6)")
+    print(f"  resize compile passes: {res['compile_delta']} (gate 0); "
+          f"survivor rel err: {res['degraded_rel']:.1e} (gate 0.0)")
+    return res
+
+
+# --------------------------------------------------------------------- #
 # multi-app deployment throughput: 2 paper apps co-resident on 4 chips
 # --------------------------------------------------------------------- #
 # Subprocess for the same simulated-device reason as _fleet_serve. Three
@@ -510,15 +652,20 @@ def run() -> dict:
     errs = _correctness()
     wc = _wallclock()
     fleet = _fleet_serve()
+    degraded = _fleet_degraded()
     deploy = _deploy_serve()
     max_err = max(errs.values())
     ok = max_err < 1e-5 and wc["speedup"] >= 5.0 and \
         wc["chip_stream"]["vs_oracle_rel"] <= 1e-5 and \
         fleet.get("scaling", 0.0) > 1.5 and \
+        degraded.get("degraded_vs_expected", 0.0) >= 0.6 and \
+        degraded.get("compile_delta", 1) == 0 and \
+        degraded.get("degraded_rel", 1.0) == 0.0 and \
         deploy.get("single_vs_legacy", 0.0) > 0.7 and \
         bool(deploy.get("stats_exact", False))
     return {"tiles": tiles, "kernel_err": max_err, "kernel_errs": errs,
             "wallclock": wc, "fleet_serve": fleet,
+            "fleet_degraded": degraded,
             "deploy_serve": deploy, "pass": bool(ok)}
 
 

@@ -237,6 +237,48 @@ class Deployment:
             {name: m.chip for name, m in self._members.items()},
             self.n_chips, served)
 
+    # ---------------- elastic resize ------------------------------- #
+    def resize(self, n_chips: Optional[int] = None, *,
+               mesh=None) -> None:
+        """Grow or shrink the fleet under live traffic with ZERO
+        compile passes (pinned via :func:`repro.chip.compile_count`):
+        drain-step semantics without the drain. Every member's
+        programmed plan is re-placed on the new shared ``"chip"`` mesh
+        (:meth:`repro.fleet.ShardedChip.resize` — program-once state
+        is mesh-agnostic), then the router's per-app lane budgets are
+        rebuilt to ``lanes_per_chip × n_chips``; in-flight lanes are
+        evicted and requeued at the FRONT with their progress intact,
+        so nothing is dropped, duplicated or re-streamed and all
+        accounting carries over. Call between engine steps.
+
+        Only for meshes this process fully addresses: resizing a
+        multi-process fleet is a membership change, which is
+        :mod:`repro.fleet.ha`'s job (degrade/rebuild + re-admission
+        through the heartbeat board)."""
+        if self._closed:
+            raise RuntimeError("deployment is closed")
+        if self.is_distributed:
+            raise ValueError(
+                "resize: this deployment's mesh spans processes — a "
+                "multi-process topology change is a membership "
+                "change; use repro.fleet.ha (degrade_to_local / "
+                "HAFleetServer) instead")
+        if mesh is None:
+            mesh = make_fleet_mesh(n_chips)
+        elif "chip" not in mesh.axis_names:
+            raise ValueError(f"resize: mesh has no 'chip' axis "
+                             f"(axes: {mesh.axis_names})")
+        for m in self._members.values():
+            if m.sharded is not None:
+                m.sharded.resize(mesh=mesh)
+        self.mesh = mesh
+        self.n_chips = mesh.devices.size
+        self.is_distributed = mesh_spans_processes(mesh)
+        if self.router is not None:
+            self.router.resize_lanes(
+                {name: self._members[name].spec.lanes_per_chip *
+                 self.n_chips for name in self.router.members})
+
     # ---------------- the live weight swap ------------------------- #
     def reprogram(self, app: str, params) -> None:
         """Swap ONE tenant's weights with no recompile of the fabric:

@@ -25,9 +25,9 @@ from typing import Any, Dict, List, Mapping, Optional
 import numpy as np
 
 from repro.fleet.router import (LockstepDrainMixin, RouterStats,
-                                TimedStepMixin, any_across_hosts,
-                                gather_global_stats, latency_arrays,
-                                stats_from_states, stream_member)
+                                TimedStepMixin, gather_global_stats,
+                                latency_arrays, stats_from_states,
+                                stream_member)
 from repro.serving.engine import (ItemRequest, KeyedItemStreamScheduler,
                                   StreamSpec)
 
@@ -155,6 +155,21 @@ class MultiAppRouter(TimedStepMixin, KeyedItemStreamScheduler):
             return "stop"               # sources dry, nothing queued
         return "skip"
 
+    # ---------------- elastic resize ------------------------------- #
+    def resize_lanes(self, lanes: Mapping[str, int]) -> None:
+        """Live per-app lane-budget change — what
+        :meth:`repro.deploy.Deployment.resize` drives after remeshing
+        the members: every app's lane block is rebuilt to its new
+        budget, in-flight lanes are evicted and requeued at the front
+        (no drop, no dup, no re-streaming — progress is preserved),
+        and all counters carry over. Apps missing from ``lanes`` keep
+        their current budget; queue limits are untouched."""
+        streams = {
+            name: StreamSpec(spec.d_in, lanes.get(name, spec.lanes),
+                             spec.queue_limit)
+            for name, spec in self._streams.items()}
+        self.resize_streams(streams)
+
     # ---------------- accounting ----------------------------------- #
     def _finished_for(self, app: str) -> list:
         return [st for st in self.finished if st.request.key == app]
@@ -212,20 +227,26 @@ class DistributedMultiAppRouter(LockstepDrainMixin, MultiAppRouter):
     _local_stream = True
 
     def _serve_decision(self, sources) -> str:
+        if not self._spmd_lockstep:
+            return MultiAppRouter._serve_decision(self, sources)
         more = bool(self.queue or self.active or
                     not all(s.exhausted for s in sources.values()))
-        return "step" if any_across_hosts(more) else "stop"
+        return "step" if self._any_across_hosts(more) else "stop"
 
     def stats_global(self) -> DeploymentStats:
         """Exact fleet-wide per-app + roll-up stats (collective: every
-        rank must call together). Each app's counters and raw
-        latencies gather separately, in declaration order, then the
-        fleet row gathers the totals — percentiles are computed over
-        every finished request in the fleet, never merged from
-        per-host percentiles."""
+        rank must call together; any rank can report the result — no
+        host-0 pinning). Each app's counters and raw latencies gather
+        separately, in declaration order, then the fleet row gathers
+        the totals — percentiles are computed over every finished
+        request in the fleet, never merged from per-host percentiles.
+        In degraded mode (after a membership change) collectives with
+        the dead peers are impossible, so this returns the LOCAL stats
+        — use the heartbeat-board roll-up for the cross-survivor
+        view."""
         import jax
 
-        if jax.process_count() == 1:
+        if not self._spmd_lockstep or jax.process_count() == 1:
             return self.stats()
         wall = self._wall_s()
         apps = {}

@@ -15,7 +15,10 @@ self-spawns N localhost ``jax.distributed`` ranks (gloo collectives),
 checks ``ShardedChip.stream_local`` == single-chip at rel 0.0, drives
 the lockstep ``DistributedFleetRouter`` off per-host
 ``StreamSource.for_host`` feeders, and rolls router stats up across
-hosts.
+hosts. Fault tolerance has a third: ``python -m repro.fleet
+--chaos-selftest`` kills a worker mid-serve and asserts the survivors
+degrade, absorb the dead rank's feed, and account for every admitted
+item exactly once (see :mod:`repro.fleet.ha`).
 
 Submodule imports are lazy (PEP 562) so importing ``repro.fleet`` —
 and in particular ``python -m repro.fleet`` booting this package —
@@ -39,6 +42,16 @@ _EXPORTS = {
     "StreamSource": "repro.fleet.source",
     "FleetReport": "repro.fleet.report",
     "fleet_report": "repro.fleet.report",
+    "HAConfig": "repro.fleet.ha",
+    "HeartbeatBoard": "repro.fleet.ha",
+    "FailureDetector": "repro.fleet.ha",
+    "StepGuard": "repro.fleet.ha",
+    "MembershipChange": "repro.fleet.ha",
+    "HAFleetServer": "repro.fleet.ha",
+    "degrade_to_local": "repro.fleet.ha",
+    "local_fleet_mesh": "repro.fleet.ha",
+    "source_snapshot": "repro.fleet.ha",
+    "replay_requests": "repro.fleet.ha",
 }
 
 __all__ = sorted(_EXPORTS)

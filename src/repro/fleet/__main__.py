@@ -23,6 +23,15 @@ sensor feeders and its outputs match the direct stream; and the
 ``stats_global`` roll-up accounts for every host's requests, items and
 lanes. The parent supervises the workers (any death kills the rest)
 and exits 0 iff every rank passed.
+
+``PYTHONPATH=src python -m repro.fleet --chaos-selftest`` — fault
+tolerance: spawns a FEDERATED fleet (independent jax processes over a
+shared heartbeat board — see :mod:`repro.fleet.ha` for why not
+``jax.distributed``), SIGKILLs one worker mid-serve at a chosen engine
+step, and asserts the survivors detect the death, absorb the dead
+host's feed, finish degraded, and account for every admitted item of
+every host exactly once — audited by the parent from the final board
+journals.
 """
 from __future__ import annotations
 
@@ -306,6 +315,246 @@ def distributed_worker(verbose: bool = True) -> int:
     return 0 if all_ok else 1
 
 
+def chaos_worker(verbose: bool = True) -> int:
+    """One host of the FEDERATED chaos fleet (spawned by
+    :func:`run_chaos_selftest`).
+
+    No ``jax.distributed``: measurement showed the coordination
+    service ABORTS every surviving rank within seconds of the
+    coordinator dying, so a fleet that must tolerate ANY single host
+    loss runs each host as an independent jax process over its own
+    local ``"chip"`` mesh, with membership and accounting on the
+    shared-filesystem heartbeat board (``REPRO_FLEET_HA_DIR``). This
+    worker deploys a 2-chip fabric (of 4 visible simulated devices),
+    serves its share of one logical sensor stream through
+    :class:`repro.fleet.ha.HAFleetServer`, survives the supervisor
+    SIGKILLing a peer mid-serve (detect → absorb the dead host's feed
+    → finish degraded), reports the board ``stats_global`` roll-up
+    from THIS rank (no host-0 pinning), then resizes the deployment
+    back to all 4 chips under zero compile passes."""
+    rank = int(os.environ["REPRO_DIST_RANK"])
+    nprocs = int(os.environ["REPRO_DIST_NPROCS"])
+    ha_dir = os.environ["REPRO_FLEET_HA_DIR"]
+    n_req = int(os.environ.get("REPRO_CHAOS_NREQ", "8"))
+
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.chip import compile_count
+    from repro.core.crossbar_layer import MLPSpec, mlp_init
+    from repro.data.pipeline import SensorPipeline
+    from repro.deploy import AppSpec, deploy
+    from repro.fleet import StreamSource
+    from repro.fleet.ha import HAConfig, HAFleetServer, HeartbeatBoard
+
+    ok = True
+    out = {"rank": rank}
+
+    def check(name, cond):
+        nonlocal ok
+        ok = ok and bool(cond)
+        if verbose:
+            print(f"  [rank {rank}] [{'ok' if cond else 'FAIL'}] "
+                  f"{name}", flush=True)
+
+    # the compile is (seed, spec)-pure: every host programs an
+    # identical 2-chip fabric with no cross-host traffic
+    dims = (784, 200, 100, 10)
+    spec = MLPSpec(dims, activation="threshold", out_activation="linear")
+    params = mlp_init(jax.random.PRNGKey(0), spec)
+    d = deploy(AppSpec("app", spec, params=params, lanes_per_chip=2,
+                       queue_limit=4), n_chips=2)
+    c0 = compile_count()
+
+    pipe = SensorPipeline(window=28, stride=18, frames_per_step=1)
+    src = StreamSource.for_host(pipe, host=rank, hosts=nprocs,
+                                n_requests=n_req, capacity=3)
+    # step_sleep_s paces serving at a sensor frame cadence — which is
+    # also what makes "mid-serve" a real window for the supervisor's
+    # kill injection (raw engine steps are sub-millisecond)
+    server = HAFleetServer(
+        d.router, src, board=HeartbeatBoard(ha_dir), rank=rank,
+        ranks=range(nprocs), pipeline=pipe, key="app",
+        config=HAConfig(timeout_s=1.0, retries=3, backoff_s=0.1,
+                        step_sleep_s=float(os.environ.get(
+                            "REPRO_CHAOS_STEP_SLEEP", "0.05"))))
+    done = server.serve()
+
+    out["completed"] = sorted(st.request.uid for st in done)
+    out["rejected"] = sorted(server.rejected_uids)
+    out["absorbed"] = server.absorbed
+    out["degraded_ips"] = server.degraded_items_per_second
+    check("own feed drained", src.exhausted)
+
+    # degraded-mode correctness: every routed output (own + absorbed)
+    # matches the single-chip direct stream
+    chip = d.chip("app")
+    with jax.default_device(jax.local_devices()[0]):
+        served_ok = all(
+            np.allclose(st.result,
+                        np.asarray(chip.stream(
+                            jnp.asarray(st.request.items))),
+                        atol=1e-5) for st in done)
+    check("survivor outputs match the direct stream", served_ok)
+
+    if server.absorbed:
+        # the failover roll-up, assumable by ANY surviving rank: this
+        # rank assembles the fleet view from the board (the dead
+        # rank's row is its last journal — exactly the work it
+        # provably delivered). Requests are exactly-once; items are
+        # at-least-once in the crash window (partially-streamed lanes
+        # replay whole), hence == on requests, >= on items.
+        gs = server.stats_global()
+        out["stats_requests"] = gs.requests
+        out["stats_items"] = gs.items
+        check("board stats_global accounts every request",
+              gs.requests == nprocs * n_req)
+        check("board stats_global items cover the stream",
+              gs.items >= nprocs * n_req * pipe.items_per_step)
+        check("degraded throughput > 0",
+              server.degraded_items_per_second > 0)
+
+    # elastic resize back to full size: re-place the programmed plan
+    # on all 4 local chips — ZERO compile passes, rel 0.0
+    d.resize(4)
+    out["resized_chips"] = d.n_chips
+    out["compile_delta"] = compile_count() - c0
+    x = np.asarray(jax.random.uniform(jax.random.PRNGKey(2),
+                                      (8, dims[0])), np.float32)
+    with jax.default_device(jax.local_devices()[0]):
+        ref = np.asarray(chip.stream(jnp.asarray(x)))
+    y = np.asarray(d.stream("app", x))
+    rel = float(np.max(np.abs(y - ref)) / max(np.max(np.abs(ref)),
+                                              1e-12))
+    out["resize_rel"] = rel
+    check("resize back to full size: zero compile passes, rel 0.0",
+          d.n_chips == 4 and compile_count() == c0 and rel == 0.0)
+
+    out["ok"] = ok
+    if verbose:
+        print(f"  [rank {rank}] chaos worker: "
+              f"{'PASS' if ok else 'FAIL'}", flush=True)
+    print(json.dumps(out), flush=True)   # JSON verdict last, by contract
+    return 0 if ok else 1
+
+
+def run_chaos_selftest(processes: int = 2, kill_rank: int = 0,
+                       kill_step: int = 3, n_requests: int = 8,
+                       verbose: bool = True,
+                       timeout: float = 600.0) -> bool:
+    """Kill a worker mid-serve; assert the fleet degrades instead of
+    dying, and that the accounting is EXACT.
+
+    Spawns a federated ``--chaos-worker`` fleet (4 simulated chips
+    visible per host, 2 deployed), lets every host start serving, then
+    SIGKILLs ``kill_rank`` the moment its published engine step
+    reaches ``kill_step`` (``launch_local_fleet(kill_at=…)`` — a real
+    external crash, not a cooperative exit). The survivors must finish
+    degraded; afterwards the parent audits the union of the final
+    heartbeat-board journals for the no-drop/no-dup contract: every
+    admitted item of every host's feed — including the dead host's —
+    is accounted exactly once (completed by exactly one rank, or
+    explicitly rejected). Killing rank 0 by default also pins that the
+    ``stats_global`` roll-up needs no host 0."""
+    import shutil
+    import tempfile
+
+    from repro.launch.simdev import (last_json_line, launch_local_fleet,
+                                     read_board)
+
+    ok = True
+
+    def check(name, cond, detail=""):
+        nonlocal ok
+        ok = ok and bool(cond)
+        if verbose:
+            print(f"  [{'ok' if cond else 'FAIL'}] {name}"
+                  f"{'  (' + str(detail) + ')' if detail else ''}",
+                  flush=True)
+
+    ha_dir = tempfile.mkdtemp(prefix="repro_chaos_")
+    try:
+        argv = [sys.executable, "-m", "repro.fleet", "--chaos-worker"]
+        results = launch_local_fleet(
+            argv, processes, devices_per_process=4, timeout=timeout,
+            on_failure="continue", kill_at=(kill_rank, kill_step),
+            ha_dir=ha_dir, poll_s=0.05,
+            extra_env={"REPRO_CHAOS_NREQ": str(n_requests)})
+
+        victim = results[kill_rank]
+        check("victim was chaos-killed mid-serve (not a clean exit)",
+              victim.injected and not victim.crashed and
+              victim.returncode not in (0, None),
+              f"rank {kill_rank} exit {victim.returncode}")
+        victim_journal = read_board(ha_dir, kill_rank) or {}
+        check("victim died with work still in flight",
+              len(victim_journal.get("completed", ())) < n_requests,
+              f"{len(victim_journal.get('completed', ()))} of "
+              f"{n_requests} done at death")
+        workers = {}
+        for r in results:
+            if r.rank == kill_rank:
+                continue
+            if verbose:
+                for line in r.stdout.strip().splitlines():
+                    print(f"    {line}")
+            check(f"survivor {r.rank} finished degraded (exit 0)",
+                  r.returncode == 0 and not r.crashed, r.stderr_tail)
+            try:
+                workers[r.rank] = last_json_line(r.stdout)
+            except (ValueError, json.JSONDecodeError):
+                workers[r.rank] = {"rank": r.rank, "ok": False,
+                                   "error": r.stderr_tail or "no output"}
+        ok = ok and all(bool(w.get("ok")) for w in workers.values())
+
+        # EXACT accounting, audited from outside the fleet: the union
+        # of the final board journals must cover every uid of every
+        # host's bounded feed exactly once
+        completed, rejected, expected = [], set(), set()
+        for rank in range(processes):
+            payload = read_board(ha_dir, rank) or {}
+            completed.extend(payload.get("completed", ()))
+            rejected |= set(payload.get("rejected_uids", ()))
+            snap = payload.get("source")
+            if snap is not None:
+                expected |= {snap["uid_base"] + k
+                             for k in range(int(snap["n_requests"]))}
+        comp_set = set(completed)
+        check("every host's feed is on the board",
+              len(expected) == processes * n_requests,
+              f"{len(expected)} uids")
+        check("no item completed twice (no dup)",
+              len(completed) == len(comp_set))
+        check("no item both completed and rejected",
+              not (comp_set & rejected))
+        check("every admitted item accounted exactly once (no drop)",
+              comp_set | rejected == expected,
+              f"missing {sorted(expected - comp_set - rejected)[:8]}")
+
+        absorbers = [w for w in workers.values()
+                     if kill_rank in w.get("absorbed", ())]
+        check("exactly one survivor absorbed the dead rank's feed",
+              len(absorbers) == 1)
+        if absorbers:
+            a = absorbers[0]
+            check("a non-zero surviving rank reported stats_global",
+                  a.get("rank") != kill_rank and
+                  a.get("stats_requests") == processes * n_requests,
+                  f"rank {a.get('rank')}: "
+                  f"{a.get('stats_requests')} requests")
+
+        summary = {"pass": bool(ok), "processes": processes,
+                   "kill_rank": kill_rank, "kill_step": kill_step,
+                   "n_requests": n_requests, "workers": workers}
+        print(json.dumps(summary), flush=True)
+        if verbose:
+            print(f"chaos selftest: {'PASS' if ok else 'FAIL'}")
+        return ok
+    finally:
+        shutil.rmtree(ha_dir, ignore_errors=True)
+
+
 def run_distributed_selftest(processes: int = 2,
                              chips_per_process: int = 2,
                              verbose: bool = True,
@@ -365,17 +614,32 @@ def main(argv=None) -> int:
                     help="simulated chips (devices) per worker process")
     ap.add_argument("--distributed-worker", action="store_true",
                     help=argparse.SUPPRESS)   # spawned, not typed
+    ap.add_argument("--chaos-selftest", action="store_true",
+                    help="kill a worker mid-serve and check the fleet "
+                         "degrades with exact item accounting")
+    ap.add_argument("--kill-rank", type=int, default=0,
+                    help="which rank the chaos selftest kills "
+                         "(default 0: also pins host-0-free stats)")
+    ap.add_argument("--kill-step", type=int, default=3,
+                    help="engine step at which the victim is killed")
+    ap.add_argument("--chaos-worker", action="store_true",
+                    help=argparse.SUPPRESS)   # spawned, not typed
     args = ap.parse_args(argv)
-    if args.distributed_worker:
+    if args.distributed_worker or args.chaos_worker:
         if "jax" not in sys.modules and "XLA_FLAGS" not in os.environ:
             os.environ["XLA_FLAGS"] = (
                 "--xla_force_host_platform_device_count="
                 + os.environ.get("REPRO_DIST_DEVICES", "1"))
             os.environ.setdefault("JAX_PLATFORMS", "cpu")
-        return distributed_worker()
+        return chaos_worker() if args.chaos_worker \
+            else distributed_worker()
     if args.distributed_selftest:
         return 0 if run_distributed_selftest(
             args.processes, args.chips_per_process) else 1
+    if args.chaos_selftest:
+        return 0 if run_chaos_selftest(
+            args.processes, kill_rank=args.kill_rank,
+            kill_step=args.kill_step) else 1
     if not args.selftest:
         ap.print_help()
         return 2

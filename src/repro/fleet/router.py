@@ -144,15 +144,32 @@ class TimedStepMixin:
     """Wall-clock stamping shared by every router engine (single-app
     and multi-app): the first step starts the clock, every step moves
     the last-step stamp, ``_wall_s`` is the span the throughput and
-    occupancy numbers divide by."""
+    occupancy numbers divide by.
+
+    Also the attachment point for high-availability instrumentation
+    (:mod:`repro.fleet.ha`): with a guard attached, every engine step
+    is wrapped by :meth:`StepGuard.run_step` — a heartbeat published
+    BEFORE entering the (possibly collective) step, a step-deadline
+    check of the peers, and translation of a failed collective into
+    :class:`repro.fleet.ha.MembershipChange` after the detector's
+    bounded retry/backoff confirms who died.
+    """
 
     _t_start: Optional[float] = None
     _t_last: float = 0.0
+    _ha_guard = None
+
+    def attach_ha(self, guard) -> None:
+        """Attach a :class:`repro.fleet.ha.StepGuard` (heartbeat +
+        step-deadline failure detection around every engine step)."""
+        self._ha_guard = guard
 
     def step(self) -> int:
         if self._t_start is None:
             self._t_start = time.perf_counter()
-        emitted = super().step()
+        step_fn = super().step
+        emitted = step_fn() if self._ha_guard is None \
+            else self._ha_guard.run_step(step_fn)
         self._t_last = time.perf_counter()
         return emitted
 
@@ -180,12 +197,31 @@ def stream_member(member, batch: np.ndarray, *,
 class LockstepDrainMixin:
     """Drain loop for SPMD routers: the local "anything left?" test is
     replaced by an all-hosts OR so every rank executes the same number
-    of collective steps and breaks on the same iteration."""
+    of collective steps and breaks on the same iteration.
+
+    ``_spmd_lockstep`` is the degraded-mode switch: after a membership
+    change (:func:`repro.fleet.ha.degrade_to_local` flips it False on
+    the instance) the surviving rank can no longer join collectives
+    with the dead peers, so every cross-host reduction falls back to
+    its local value and the router behaves like its single-process
+    parent — same lanes, same counters, same accounting.
+    """
+
+    _spmd_lockstep = True
+
+    def _any_across_hosts(self, flag: bool) -> bool:
+        if not self._spmd_lockstep:
+            return bool(flag)
+        guard = getattr(self, "_ha_guard", None)
+        if guard is not None:
+            return guard.call(any_across_hosts, flag)
+        return any_across_hosts(flag)
 
     def run_until_drained(self, max_steps: int = 10_000) -> List:
         steps = 0
         while steps < max_steps:
-            if not any_across_hosts(bool(self.queue or self.active)):
+            if not self._any_across_hosts(
+                    bool(self.queue or self.active)):
                 break
             self.step()
             steps += 1
@@ -232,9 +268,38 @@ class FleetRouter(TimedStepMixin, ItemStreamScheduler):
         return getattr(fleet, "n_chips", 1)
 
     # ---------------- payload ------------------------------------- #
+    # True on the SPMD variant (each rank streams its local rows);
+    # degraded mode flips it back off on the instance
+    _local_stream = False
+
     def _stream_batch(self, batch: np.ndarray) -> np.ndarray:
         return stream_member(self.fleet, batch,
-                             use_kernel=self.use_kernel)
+                             use_kernel=self.use_kernel,
+                             local=self._local_stream)
+
+    # ---------------- elastic resize ------------------------------- #
+    def resize(self, n_chips: Optional[int] = None, *,
+               mesh=None) -> None:
+        """Live fleet resize (grow OR shrink) under traffic: remesh the
+        payload (``ShardedChip.resize`` — a zero-recompile re-placement
+        of the programmed plan), then rebuild this router's lane pool
+        to ``lanes_per_chip × chips``, evicting and front-requeueing
+        the in-flight lanes so nothing is dropped, duplicated or
+        re-streamed. Payloads without a ``resize`` method (a toy fleet
+        in the property tests) just have ``n_chips`` reassigned."""
+        fleet_resize = getattr(self.fleet, "resize", None)
+        if fleet_resize is not None:
+            fleet_resize(n_chips, mesh=mesh)
+        elif n_chips is not None and hasattr(self.fleet, "n_chips"):
+            self.fleet.n_chips = n_chips
+        elif mesh is None:
+            raise ValueError(
+                f"resize: {type(self.fleet).__name__} has no resize() "
+                "and no n_chips to reassign")
+        self.n_chips = getattr(self.fleet, "n_chips",
+                               n_chips if n_chips else self.n_chips)
+        self.resize_slots(self.lanes_per_chip *
+                          self._lane_chips(self.fleet))
 
     # ---------------- the closed serving loop ---------------------- #
     def serve(self, source, *,
@@ -345,23 +410,21 @@ class DistributedFleetRouter(LockstepDrainMixin, FleetRouter):
         return fleet.n_local_chips
 
     # ---------------- payload ------------------------------------- #
-    def _stream_batch(self, batch: np.ndarray) -> np.ndarray:
-        # (local slots, d_in) → (local slots, d_out): each rank
-        # contributes its lanes' rows and reads back its own shards
-        return stream_member(self.fleet, batch,
-                             use_kernel=self.use_kernel, local=True)
+    # (local slots, d_in) → (local slots, d_out): each rank
+    # contributes its lanes' rows and reads back its own shards
+    _local_stream = True
 
     # ---------------- lockstep control plane ----------------------- #
-    def _any_across_hosts(self, flag: bool) -> bool:
-        return any_across_hosts(flag)
-
     def _serve_decision(self, source) -> str:
         """The fleet-wide continue/stop decision: the serve loop runs
         until NO host has queued, active, or un-pumped traffic, so a
         rank that drained early keeps joining the collective steps the
         busy ranks still need. Lockstep holds because every rank
         reduces the same flags on the same iteration — there is no
-        local "skip" path."""
+        local "skip" path. Degraded mode (``_spmd_lockstep`` off)
+        falls back to the single-process decision."""
+        if not self._spmd_lockstep:
+            return FleetRouter._serve_decision(self, source)
         more = bool(self.queue or self.active or
                     not source.exhausted)
         return "step" if self._any_across_hosts(more) else "stop"
@@ -369,15 +432,19 @@ class DistributedFleetRouter(LockstepDrainMixin, FleetRouter):
     # ---------------- fleet-wide accounting ------------------------ #
     def stats_global(self) -> RouterStats:
         """The exact fleet-wide roll-up, assembled on every rank (hosts
-        get identical results; host 0 is conventionally the one that
-        reports). Counters are allgathered; per-request latency/wait
-        vectors are padded to the fleet-wide max request count and
-        allgathered too, so the percentiles are computed over every
-        finished request in the fleet — not merged from per-host
-        percentiles. Collective: every rank must call together."""
+        get identical results; any rank can report — there is no
+        host-0 pinning). Counters are allgathered; per-request
+        latency/wait vectors are padded to the fleet-wide max request
+        count and allgathered too, so the percentiles are computed
+        over every finished request in the fleet — not merged from
+        per-host percentiles. Collective: every rank must call
+        together. In degraded mode (after a membership change) the
+        dead peers cannot join a collective, so this returns the LOCAL
+        stats — the fleet-wide roll-up across survivors is then the
+        heartbeat-board one (:meth:`repro.fleet.ha.HAFleetServer.stats_global`)."""
         import jax
 
-        if jax.process_count() == 1:
+        if not self._spmd_lockstep or jax.process_count() == 1:
             return self.stats()
         lat, wait = self._latency_arrays()
         return gather_global_stats(
@@ -438,6 +505,42 @@ def allgather_latencies(lat: np.ndarray, wait: np.ndarray,
     return lat_all[~np.isnan(lat_all)], wait_all[~np.isnan(wait_all)]
 
 
+def assemble_stats(counts_all: np.ndarray, walls_all: np.ndarray,
+                   lat_all: np.ndarray,
+                   wait_all: np.ndarray) -> RouterStats:
+    """The exact fleet-wide roll-up FORMULA, independent of how the
+    per-host rows got here: ``counts_all`` is a (hosts, 5) int array
+    of (requests, items, steps, rejected, lanes) rows, ``walls_all``
+    the per-host wall clocks, ``lat_all``/``wait_all`` the
+    concatenated per-request vectors. Shared by the collective
+    :func:`gather_global_stats` and the heartbeat-board roll-up
+    (:mod:`repro.fleet.ha`), so lockstep and degraded-mode accounting
+    can never drift apart."""
+    counts_all = np.asarray(counts_all, np.int64).reshape(-1, 5)
+    total_items = int(counts_all[:, 1].sum())
+    lane_steps = int((counts_all[:, 2] * counts_all[:, 4]).sum())
+    wall = float(np.asarray(walls_all).max()) if np.size(walls_all) \
+        else 0.0
+    lat_all = np.asarray(lat_all, np.float64).ravel()
+    wait_all = np.asarray(wait_all, np.float64).ravel()
+    return RouterStats(
+        requests=int(counts_all[:, 0].sum()),
+        items=total_items,
+        steps=int(counts_all[:, 2].max()) if counts_all.size else 0,
+        wall_s=wall,
+        items_per_second=total_items / wall if wall else 0.0,
+        occupancy=total_items / lane_steps if lane_steps else 0.0,
+        wait_s_mean=float(wait_all.mean()) if wait_all.size else 0.0,
+        latency_s_mean=float(lat_all.mean()) if lat_all.size else 0.0,
+        latency_s_p50=float(np.percentile(lat_all, 50))
+        if lat_all.size else 0.0,
+        latency_s_p95=float(np.percentile(lat_all, 95))
+        if lat_all.size else 0.0,
+        rejected=int(counts_all[:, 3].sum()),
+        lanes=int(counts_all[:, 4].sum()),
+    )
+
+
 def gather_global_stats(lat: np.ndarray, wait: np.ndarray, *,
                         requests: int, items: int, steps: int,
                         rejected: int, lanes: int,
@@ -454,23 +557,4 @@ def gather_global_stats(lat: np.ndarray, wait: np.ndarray, *,
 
     n_max = int(counts_all[:, 0].max())
     lat_all, wait_all = allgather_latencies(lat, wait, n_max)
-
-    total_items = int(counts_all[:, 1].sum())
-    lane_steps = int((counts_all[:, 2] * counts_all[:, 4]).sum())
-    wall = float(walls_all.max())
-    return RouterStats(
-        requests=int(counts_all[:, 0].sum()),
-        items=total_items,
-        steps=int(counts_all[:, 2].max()),
-        wall_s=wall,
-        items_per_second=total_items / wall if wall else 0.0,
-        occupancy=total_items / lane_steps if lane_steps else 0.0,
-        wait_s_mean=float(wait_all.mean()) if wait_all.size else 0.0,
-        latency_s_mean=float(lat_all.mean()) if lat_all.size else 0.0,
-        latency_s_p50=float(np.percentile(lat_all, 50))
-        if lat_all.size else 0.0,
-        latency_s_p95=float(np.percentile(lat_all, 95))
-        if lat_all.size else 0.0,
-        rejected=int(counts_all[:, 3].sum()),
-        lanes=int(counts_all[:, 4].sum()),
-    )
+    return assemble_stats(counts_all, walls_all, lat_all, wait_all)

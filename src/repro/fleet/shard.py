@@ -259,6 +259,46 @@ class ShardedChip:
     def __call__(self, x: jax.Array, **kw) -> jax.Array:
         return self.stream(x, **kw)
 
+    def resize(self, n_chips: Optional[int] = None, *,
+               mesh: Optional[jax.sharding.Mesh] = None) -> None:
+        """Elastic remesh: re-place the SAME programmed plan on a new
+        ``"chip"`` mesh (grown, shrunk, or rebuilt from surviving
+        devices after a failure) — ZERO compile passes, because the
+        program-once plan is mesh-agnostic: only the replication
+        (``replicate_to_mesh``) and the cached per-mesh jitted
+        dispatchers change. The jit cache is dropped (the mesh is part
+        of the shard_map closure), so the first step on the new mesh
+        re-traces the same per-chip body — an XLA re-trace, not a chip
+        compile (``compile_count()`` is the pin).
+
+        Default mesh is :func:`make_fleet_mesh` over the process's
+        visible devices; pass an explicit ``mesh`` to rebuild from a
+        survivor subset (:func:`repro.fleet.ha.local_fleet_mesh`).
+        The fleet rate target is re-validated against the new capacity
+        — shrinking below the declared ``items_per_second`` warns (or
+        raises under ``strict_rate``), which is exactly the degraded-
+        mode SLO signal.
+        """
+        if mesh is None:
+            mesh = make_fleet_mesh(n_chips)
+        elif self.axis not in mesh.axis_names:
+            raise ValueError(
+                f"resize: mesh has no {self.axis!r} axis "
+                f"(axes: {mesh.axis_names})")
+        self.mesh = mesh
+        self._fns = {}
+        self._plan = replicate_to_mesh(self.chip.plan, self.mesh)
+        validate_stream_rate(
+            self.items_per_second,
+            self.chip.replication * self.mesh.devices.size,
+            self.chip.route, self.strict_rate,
+            context="ShardedChip.resize",
+            fabric=(f"fleet replica(s) ({self.mesh.devices.size} "
+                    f"chip(s) x {self.chip.replication} replica(s))"),
+            remedy=("Add chips to the fleet, use a larger core "
+                    "geometry, or lower the fleet target rate."),
+            stacklevel=3)
+
     def reprogram(self, params, **kw) -> None:
         """Live weight swap: re-encode ``params`` into tile state for
         the SAME compiled fabric and re-place the plan on every mesh

@@ -34,6 +34,9 @@ class BoundedQueue:
     def __len__(self) -> int:
         return len(self._q)
 
+    def __iter__(self):
+        return iter(self._q)
+
     @property
     def full(self) -> bool:
         return len(self._q) >= self.capacity
@@ -47,6 +50,15 @@ class BoundedQueue:
             return False
         self._q.append(item)
         return True
+
+    def requeue(self, item) -> None:
+        """Front-of-queue re-admission, ALWAYS accepted: the item was
+        already admitted once (it is being put back, not produced), so
+        refusing it on a full queue would drop it. The queue may
+        transiently exceed ``capacity``; ``full`` then stays True, so
+        the overage is paid by the PRODUCER stalling (``offer``
+        refusing) — never charged against the admission budget twice."""
+        self._q.appendleft(item)
 
     def peek(self):
         return self._q[0] if self._q else None
@@ -143,6 +155,20 @@ class StreamSource:
             self.produced += 1
             made += 1
         return made
+
+    def requeue(self, requests) -> None:
+        """Put already-produced requests back at the FRONT of the
+        staging queue (first element ends up first): the failover path
+        re-admitting a dead host's in-flight frames, or a consumer
+        handing back work it could not place. Requeued requests do not
+        touch ``produced``/``n_requests`` — the production budget was
+        spent when they were first made (a takeover's replayed frames
+        were the dead host's budget, not this source's) — and they
+        may push the queue over ``capacity``: ``pump`` then stalls
+        until the overage drains, so backpressure is preserved without
+        double-charging admission."""
+        for req in reversed(list(requests)):
+            self.queue.requeue(req)
 
     # ---------------- consumer side -------------------------------- #
     def peek(self) -> Optional[ItemRequest]:

@@ -97,13 +97,52 @@ def pick_free_port() -> int:
         return s.getsockname()[1]
 
 
+# ------------------------------------------------------------------- #
+# heartbeat-board file convention (shared with repro.fleet.ha)
+# ------------------------------------------------------------------- #
+# The HA layer's heartbeat board is one JSON file per rank in a shared
+# directory; the FILENAME and the ``"step"`` field are the only parts
+# the (jax-free) supervisor needs — it polls them to inject a worker
+# kill at a chosen serving step. The full payload schema lives with
+# the writer, repro.fleet.ha.HeartbeatBoard, which imports these
+# helpers so the convention cannot fork.
+def board_path(root: str, rank: int) -> str:
+    """Path of one rank's heartbeat file."""
+    return os.path.join(root, f"rank_{int(rank)}.json")
+
+
+def read_board(root: str, rank: int) -> Optional[dict]:
+    """Read one rank's latest heartbeat payload; None when the rank
+    has not published yet (writers replace atomically, so a payload is
+    either absent or complete)."""
+    try:
+        with open(board_path(root, rank)) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
 @dataclasses.dataclass
 class WorkerResult:
     rank: int
     returncode: int
     stdout: str
     stderr: str
-    killed: bool = False          # terminated because a peer died
+    killed: bool = False          # terminated by supervisor cleanup
+    injected: bool = False        # SIGKILLed on purpose (chaos kill_at)
+
+    @property
+    def crashed(self) -> bool:
+        """Died on its own (nonzero exit the supervisor neither
+        injected nor caused by cleanup) — the clean-exit/crash
+        distinction the chaos harness keys on."""
+        return (not self.killed and not self.injected
+                and self.returncode not in (0, None))
+
+    @property
+    def stderr_tail(self) -> str:
+        """The last few stderr lines — what a failure report wants."""
+        return "\n".join(self.stderr.strip().splitlines()[-8:])
 
 
 def launch_local_fleet(argv: Sequence[str], n_processes: int, *,
@@ -111,7 +150,11 @@ def launch_local_fleet(argv: Sequence[str], n_processes: int, *,
                        coordinator_port: Optional[int] = None,
                        timeout: float = 600.0,
                        extra_env: Optional[Dict[str, str]] = None,
-                       poll_s: float = 0.2) -> List[WorkerResult]:
+                       poll_s: float = 0.2,
+                       on_failure: str = "kill",
+                       kill_at: Optional[Sequence[int]] = None,
+                       ha_dir: Optional[str] = None
+                       ) -> List[WorkerResult]:
     """Spawn ``n_processes`` localhost workers for a jax.distributed
     fleet and supervise them to completion.
 
@@ -121,18 +164,49 @@ def launch_local_fleet(argv: Sequence[str], n_processes: int, *,
 
         REPRO_DIST_RANK / REPRO_DIST_NPROCS / REPRO_DIST_PORT
         REPRO_DIST_DEVICES   (simulated devices per process)
+        REPRO_FLEET_HA_DIR   (heartbeat-board directory, if ``ha_dir``)
 
-    Supervision is the clean-shutdown contract the tests pin: if any
-    worker exits non-zero — or the deadline passes — every survivor is
-    terminated immediately instead of being left blocked on a
-    collective (or on ``jax.distributed.initialize``) that can never
-    complete. Worker stdout/stderr are staged in temp files, never
-    pipes, so a chatty worker cannot deadlock the supervisor.
+    ``on_failure`` picks the supervision contract:
+
+    * ``"kill"`` (default, the PR-4 behavior the tests pin): the
+      moment ANY worker exits non-zero — or the deadline passes —
+      every survivor is terminated instead of being left blocked on a
+      collective (or ``jax.distributed.initialize``) that can never
+      complete.
+    * ``"continue"``: a worker death is an EVENT, not a shutdown —
+      survivors run on (the HA serve loop's degraded mode); only the
+      deadline terminates stragglers. :attr:`WorkerResult.crashed`
+      and :attr:`WorkerResult.stderr_tail` tell clean exits from
+      crashes afterwards.
+
+    ``kill_at=(rank, step)`` is the chaos-injection primitive: the
+    supervisor polls ``rank``'s heartbeat file under ``ha_dir`` (see
+    :func:`read_board`) and SIGKILLs the worker the moment its
+    published ``"step"`` reaches ``step`` — a real external crash
+    mid-serve, not a cooperative exit. The injected kill is marked
+    ``injected`` (not ``crashed``) and does NOT trigger ``"kill"``-
+    mode shutdown accounting by itself under ``"continue"``.
+
+    Worker stdout/stderr are staged in temp files, never pipes, so a
+    chatty worker cannot deadlock the supervisor.
     """
+    if on_failure not in ("kill", "continue"):
+        raise ValueError(f"on_failure must be 'kill' or 'continue', "
+                         f"got {on_failure!r}")
+    if kill_at is not None:
+        kill_rank, kill_step = int(kill_at[0]), int(kill_at[1])
+        if not 0 <= kill_rank < n_processes:
+            raise ValueError(f"kill_at rank {kill_rank} not in "
+                             f"[0, {n_processes})")
+        if ha_dir is None:
+            raise ValueError("kill_at needs ha_dir: the supervisor "
+                             "watches the victim's heartbeat file to "
+                             "time the kill")
     port = coordinator_port or pick_free_port()
     procs: List[subprocess.Popen] = []
     outs, errs = [], []
     results: List[Optional[WorkerResult]] = [None] * n_processes
+    injected = [False] * n_processes
     try:
         for rank in range(n_processes):
             env = simulated_device_env(devices_per_process,
@@ -143,6 +217,8 @@ def launch_local_fleet(argv: Sequence[str], n_processes: int, *,
                 "REPRO_DIST_PORT": str(port),
                 "REPRO_DIST_DEVICES": str(devices_per_process),
             })
+            if ha_dir is not None:
+                env["REPRO_FLEET_HA_DIR"] = ha_dir
             out = tempfile.TemporaryFile(mode="w+t")
             err = tempfile.TemporaryFile(mode="w+t")
             outs.append(out)
@@ -157,8 +233,23 @@ def launch_local_fleet(argv: Sequence[str], n_processes: int, *,
             codes = [p.poll() for p in procs]
             if all(c is not None for c in codes):
                 break
-            if any(c is not None and c != 0 for c in codes) or \
-                    time.monotonic() > deadline:
+            if kill_at is not None and not injected[kill_rank] and \
+                    codes[kill_rank] is None:
+                beat = read_board(ha_dir, kill_rank)
+                if beat is not None and \
+                        beat.get("step", -1) >= kill_step:
+                    procs[kill_rank].kill()      # SIGKILL: a crash
+                    injected[kill_rank] = True
+            uninjected_death = any(
+                c is not None and c != 0 and not injected[i]
+                for i, c in enumerate(codes))
+            if time.monotonic() > deadline:
+                failed = True
+                break
+            if on_failure == "kill" and (
+                    uninjected_death or
+                    any(injected[i] and c is not None
+                        for i, c in enumerate(codes))):
                 failed = True
                 break
             time.sleep(poll_s)
@@ -183,7 +274,7 @@ def launch_local_fleet(argv: Sequence[str], n_processes: int, *,
             results[rank] = WorkerResult(
                 rank=rank, returncode=p.returncode,
                 stdout=outs[rank].read(), stderr=errs[rank].read(),
-                killed=killed[rank])
+                killed=killed[rank], injected=injected[rank])
     finally:
         for p in procs:
             if p.poll() is None:

@@ -284,6 +284,15 @@ class KeyedItemStreamScheduler(SlotScheduler):
     def _request_key(self, request):
         return getattr(request, "key", None)
 
+    def _entry_key(self, entry):
+        """Stream key of a queue entry — a fresh :class:`ItemRequest`
+        OR an in-flight :class:`ItemRequestState` re-admitted by
+        :meth:`requeue` (eviction/resize/failover put *states* back on
+        the queue so their progress is preserved)."""
+        if isinstance(entry, ItemRequestState):
+            return self._request_key(entry.request)
+        return self._request_key(entry)
+
     # ---------------- keyed admission ------------------------------ #
     def submit(self, request: ItemRequest) -> bool:
         """Enqueue a request on its key's stream; False = that stream's
@@ -323,7 +332,7 @@ class KeyedItemStreamScheduler(SlotScheduler):
             waiting = list(self.queue)
             self.queue.clear()
             for idx, req in enumerate(waiting):
-                key = self._request_key(req)
+                key = self._entry_key(req)
                 lanes = free_by_key.get(key)
                 if not lanes:
                     self.queue.append(req)
@@ -332,7 +341,9 @@ class KeyedItemStreamScheduler(SlotScheduler):
                 self.free.remove(slot)
                 self._queued[key] -= 1
                 try:
-                    st = self._begin(req, slot)
+                    st = self._resume(req, slot) \
+                        if isinstance(req, ItemRequestState) \
+                        else self._begin(req, slot)
                 except BaseException:
                     # a malformed request must cost only ITSELF: give
                     # its lane back and re-file the untouched tail so
@@ -359,12 +370,91 @@ class KeyedItemStreamScheduler(SlotScheduler):
                                 t_admit=time.perf_counter(),
                                 admit_step=self.steps)
 
+    def _resume(self, st: ItemRequestState, slot: int) -> ItemRequestState:
+        """Re-admit an evicted in-flight state into a (possibly
+        different) lane of its key's block: progress (``pos``),
+        already-emitted ``outputs`` and the original admission stamps
+        are preserved — nothing is re-streamed, latency stays measured
+        from the ORIGINAL submit/admit."""
+        st.slot = slot
+        return st
+
     def _done(self, st: ItemRequestState) -> bool:
         return st.pos >= st.request.items.shape[0]
 
     def _on_finish(self, st: ItemRequestState) -> None:
         st.t_done = time.perf_counter()
         st.done_step = self.steps
+
+    # ---------------- eviction / re-admission / live resize --------- #
+    def evict_active(self) -> List[ItemRequestState]:
+        """Detach every active lane's state, returning them slot-
+        ordered (admission order within a key). Progress and outputs
+        are preserved; the lanes go back to the free pool. The caller
+        owns the states — :meth:`requeue` puts them back at the front
+        of the admission queue (the degraded-mode / resize path)."""
+        states = [self.active[slot] for slot in sorted(self.active)]
+        self.active.clear()
+        for st in states:
+            self.free.append(st.slot)
+        return states
+
+    def requeue(self, entries) -> None:
+        """Front-of-queue re-admission, BYPASSING the per-key queue
+        limit: these entries were already admitted once (a resize's
+        evicted lanes, a dead host's replayed frames) — bouncing them
+        on a full queue would break the no-drop invariant. The queue
+        may transiently exceed its bound; per-key budgets still count
+        the overage, so fresh ``submit`` calls see backpressure until
+        it drains. Accepts :class:`ItemRequest`s and in-flight
+        :class:`ItemRequestState`s alike; order is preserved (first
+        entry is admitted first)."""
+        for entry in reversed(list(entries)):
+            key = self._entry_key(entry)
+            if key not in self._streams:
+                raise ValueError(f"requeue: unknown stream key {key!r}")
+            self.queue.appendleft(entry)
+            self._queued[key] += 1
+
+    def resize_streams(self, streams) -> List[ItemRequestState]:
+        """Live lane-topology change (elastic resize / degraded mode):
+        evict every active lane, rebuild the contiguous per-key lane
+        blocks for the new ``{key: StreamSpec}``, and requeue the
+        evicted states at the FRONT so they resume before anything
+        queued behind them. Keys and item widths must match — a resize
+        changes lane budgets, not what the streams compute. Counters
+        (steps, items, finished, rejections) carry over: accounting
+        survives the topology change. Returns the evicted states."""
+        new = dict(streams)
+        if set(new) != set(self._streams):
+            raise ValueError(
+                f"resize_streams: keys must match (have "
+                f"{sorted(map(repr, self._streams))}, got "
+                f"{sorted(map(repr, new))})")
+        for key, spec in new.items():
+            if spec.lanes < 1:
+                raise ValueError(f"stream {key!r}: needs lanes >= 1")
+            if spec.d_in != self._streams[key].d_in:
+                raise ValueError(
+                    f"stream {key!r}: cannot change d_in live "
+                    f"({self._streams[key].d_in} -> {spec.d_in})")
+        evicted = self.evict_active()
+        self._streams = new
+        self.slots = sum(s.lanes for s in new.values())
+        self.free = deque(range(self.slots))
+        self._slot_key.clear()
+        self._base.clear()
+        self._batches.clear()
+        base = 0
+        for key, spec in new.items():
+            self._base[key] = base
+            for slot in range(base, base + spec.lanes):
+                self._slot_key[slot] = key
+            self._batches[key] = np.zeros((spec.lanes, spec.d_in),
+                                          np.float32)
+            base += spec.lanes
+        self.requeue(evicted)
+        return evicted
 
     # ---------------- one keyed engine step ------------------------ #
     def _step_active(self) -> int:
@@ -415,6 +505,17 @@ class ItemStreamScheduler(KeyedItemStreamScheduler):
         self.d_in = d_in
         self.queue_limit = queue_limit
         self._batch = self._batches[None]
+
+    def resize_streams(self, streams) -> List[ItemRequestState]:
+        evicted = super().resize_streams(streams)
+        self._batch = self._batches[None]       # refresh the alias
+        return evicted
+
+    def resize_slots(self, slots: int) -> List[ItemRequestState]:
+        """Live lane-count change for the anonymous stream (see
+        :meth:`KeyedItemStreamScheduler.resize_streams`)."""
+        return self.resize_streams(
+            {None: StreamSpec(self.d_in, slots, self.queue_limit)})
 
     def _stream_batch(self, batch: np.ndarray) -> np.ndarray:
         """(slots, d_in) → (slots, d_out), one batched payload step."""

@@ -2,12 +2,14 @@
 
 Two things live here:
 
-* ``slow`` / ``distributed`` markers, OFF by default so the tier-1
-  gate (`pytest -x -q`) stays fast: opt in with ``--run-slow`` /
-  ``--run-distributed`` (or ``REPRO_RUN_SLOW=1`` /
-  ``REPRO_RUN_DISTRIBUTED=1`` for CI matrices that can't pass flags).
+* ``slow`` / ``distributed`` / ``chaos`` markers, OFF by default so
+  the tier-1 gate (`pytest -x -q`) stays fast: opt in with
+  ``--run-slow`` / ``--run-distributed`` / ``--run-chaos`` (or
+  ``REPRO_RUN_SLOW=1`` / ``REPRO_RUN_DISTRIBUTED=1`` /
+  ``REPRO_RUN_CHAOS=1`` for CI matrices that can't pass flags).
   The distributed suite spawns real multi-process ``jax.distributed``
-  fleets — minutes, not seconds.
+  fleets — minutes, not seconds; the chaos suite additionally KILLS
+  workers mid-serve to exercise the failure paths.
 
 * subprocess fixtures over :mod:`repro.launch.simdev`, the one place
   that knows how to pin XLA's simulated-device count (and the
@@ -30,6 +32,10 @@ def pytest_addoption(parser):
         "--run-distributed", action="store_true", default=False,
         help="run tests marked distributed (multi-process "
              "jax.distributed fleets; skipped by default)")
+    parser.addoption(
+        "--run-chaos", action="store_true", default=False,
+        help="run tests marked chaos (multi-process fleets with "
+             "injected worker kills; skipped by default)")
 
 
 def pytest_configure(config):
@@ -40,6 +46,10 @@ def pytest_configure(config):
         "markers", "distributed: spawns a multi-process "
         "jax.distributed fleet; excluded from the default tier-1 run "
         "(enable with --run-distributed / REPRO_RUN_DISTRIBUTED=1)")
+    config.addinivalue_line(
+        "markers", "chaos: spawns a multi-process fleet and kills "
+        "workers mid-serve; excluded from the default tier-1 run "
+        "(enable with --run-chaos / REPRO_RUN_CHAOS=1)")
 
 
 def pytest_collection_modifyitems(config, items):
@@ -47,13 +57,19 @@ def pytest_collection_modifyitems(config, items):
         os.environ.get("REPRO_RUN_SLOW") == "1"
     run_dist = config.getoption("--run-distributed") or \
         os.environ.get("REPRO_RUN_DISTRIBUTED") == "1"
+    run_chaos = config.getoption("--run-chaos") or \
+        os.environ.get("REPRO_RUN_CHAOS") == "1"
     skip_slow = pytest.mark.skip(
         reason="slow test: pass --run-slow (or REPRO_RUN_SLOW=1)")
     skip_dist = pytest.mark.skip(
         reason="distributed test: pass --run-distributed "
                "(or REPRO_RUN_DISTRIBUTED=1)")
+    skip_chaos = pytest.mark.skip(
+        reason="chaos test: pass --run-chaos (or REPRO_RUN_CHAOS=1)")
     for item in items:
-        if "distributed" in item.keywords and not run_dist:
+        if "chaos" in item.keywords and not run_chaos:
+            item.add_marker(skip_chaos)
+        elif "distributed" in item.keywords and not run_dist:
             item.add_marker(skip_dist)
         elif "slow" in item.keywords and not run_slow:
             item.add_marker(skip_slow)

@@ -17,6 +17,12 @@ False exactly when the queue is full; per-request latencies monotone
 is a row-pure toy fleet (``y = 2x + 1``) — the router is payload-
 agnostic, and a per-example chip compile would turn thousands of
 schedules into minutes.
+
+The elastic variants re-run the same invariants across MID-SERVE
+membership changes: ``router.resize`` between waves (grow and shrink,
+with lanes full of half-streamed requests) must preserve no-drop/
+no-dup, keep every step's emission within the CURRENT lane budget, and
+never re-stream an already-emitted item.
 """
 import dataclasses
 
@@ -141,6 +147,65 @@ def check_all(schedule, *, lanes_per_chip, n_chips, queue_limit):
     return router
 
 
+def drive_with_resize(schedule, chip_counts, *, lanes_per_chip=2,
+                      queue_limit=None) -> tuple:
+    """Like :func:`drive`, but the fleet CHANGES SIZE mid-serve: after
+    wave ``i`` the router is resized to ``chip_counts[i]`` chips (the
+    first entry is the starting size), with whatever is mid-flight
+    evicted and front-requeued by the scheduler rebuild. Returns
+    (router, log, lane_caps) where ``lane_caps[k]`` is the lane budget
+    in force at engine step ``k``."""
+    fleet = ToyFleet(chip_counts[0])
+    router = FleetRouter(fleet, lanes_per_chip=lanes_per_chip,
+                         queue_limit=queue_limit)
+    rng = np.random.default_rng(0)
+    log = DriveLog([], [], [], [])
+    lane_caps = []
+    uid = 0
+    for (lengths, steps_after), n_next in zip(schedule, chip_counts):
+        for n in lengths:
+            items = rng.uniform(-1, 1, (n, D_IN)).astype(np.float32)
+            expected = queue_limit is None or \
+                len(router.queue) < queue_limit
+            got = router.submit(ItemRequest(uid=uid, items=items))
+            log.submit_expect.append((got, expected))
+            (log.accepted if got else log.rejected).append(uid)
+            uid += 1
+        for _ in range(steps_after):
+            lane_caps.append(router.slots)
+            log.step_emitted.append(router.step())
+        router.resize(n_next)           # the membership change
+    while router.queue or router.active:
+        lane_caps.append(router.slots)
+        log.step_emitted.append(router.step())
+    return router, log, lane_caps
+
+
+def check_backfill_bound_elastic(router, log, lane_caps,
+                                 lanes_per_chip, chip_counts):
+    """The elastic form of the backfill bound: each step's emission is
+    capped by the lane budget IN FORCE at that step, and the final
+    slot count matches the last resize."""
+    assert router.slots == lanes_per_chip * chip_counts[-1]
+    assert router.n_chips == chip_counts[-1]
+    assert len(lane_caps) == len(log.step_emitted)
+    assert all(0 <= e <= cap
+               for e, cap in zip(log.step_emitted, lane_caps))
+
+
+def check_all_elastic(schedule, chip_counts, *, lanes_per_chip,
+                      queue_limit):
+    router, log, lane_caps = drive_with_resize(
+        schedule, chip_counts, lanes_per_chip=lanes_per_chip,
+        queue_limit=queue_limit)
+    check_no_drop_no_dup(router, log)
+    check_backfill_bound_elastic(router, log, lane_caps,
+                                 lanes_per_chip, chip_counts)
+    check_admission_exact(router, log, queue_limit)
+    check_latency_monotone(router)
+    return router
+
+
 # ---------------------------------------------------------------------- #
 # seeded fallback — always runs, hypothesis or not
 # ---------------------------------------------------------------------- #
@@ -168,6 +233,57 @@ def test_invariants_random_schedules_bounded_queue(seed):
               lanes_per_chip=int(rng.integers(1, 3)),
               n_chips=int(rng.integers(1, 3)),
               queue_limit=int(rng.integers(1, 4)))
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_invariants_across_membership_changes(seed):
+    rng = np.random.default_rng(200 + seed)
+    schedule = _random_schedule(rng)
+    chip_counts = [int(rng.integers(1, 5)) for _ in schedule]
+    check_all_elastic(schedule, chip_counts,
+                      lanes_per_chip=int(rng.integers(1, 4)),
+                      queue_limit=None)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_invariants_across_membership_changes_bounded(seed):
+    rng = np.random.default_rng(300 + seed)
+    schedule = _random_schedule(rng)
+    chip_counts = [int(rng.integers(1, 4)) for _ in schedule]
+    check_all_elastic(schedule, chip_counts,
+                      lanes_per_chip=int(rng.integers(1, 3)),
+                      queue_limit=int(rng.integers(1, 4)))
+
+
+def test_shrink_grow_preserves_streamed_progress():
+    """A deterministic worst case: fill every lane with long requests,
+    shrink to one lane-block mid-flight, then grow back — every item
+    must come out exactly once, never re-streamed (items_emitted ==
+    total items == per-step sum), with outputs exact."""
+    fleet = ToyFleet(4)
+    router = FleetRouter(fleet, lanes_per_chip=2)
+    rng = np.random.default_rng(1)
+    reqs = [ItemRequest(uid=i,
+                        items=rng.uniform(-1, 1, (10, D_IN))
+                        .astype(np.float32))
+            for i in range(8)]
+    for r in reqs:
+        assert router.submit(r)
+    emitted = [router.step() for _ in range(3)]     # lanes mid-request
+    router.resize(1)                                # shrink 4 → 1 chip
+    assert router.slots == 2
+    emitted += [router.step() for _ in range(3)]
+    router.resize(4)                                # grow back
+    assert router.slots == 8
+    while router.queue or router.active:
+        emitted.append(router.step())
+    assert sorted(st.request.uid for st in router.finished) == \
+        list(range(8))
+    assert router.items_emitted == 80 == sum(emitted)
+    for st in router.finished:
+        np.testing.assert_allclose(
+            st.result, np.asarray(st.request.items) * 2.0 + 1.0,
+            rtol=1e-6)
 
 
 def test_merge_stats_is_consistent_with_parts():
@@ -221,6 +337,18 @@ if HAVE_HYPOTHESIS:
                                     queue_limit):
         check_all(schedule, lanes_per_chip=lanes_per_chip,
                   n_chips=n_chips, queue_limit=queue_limit)
+
+    @settings(max_examples=40, deadline=None)
+    @given(schedule=schedules,
+           lanes_per_chip=st.integers(1, 3),
+           chip_seq=st.lists(st.integers(1, 4), min_size=6,
+                             max_size=6),
+           queue_limit=st.one_of(st.none(), st.integers(1, 4)))
+    def test_prop_membership_changes(schedule, lanes_per_chip,
+                                     chip_seq, queue_limit):
+        check_all_elastic(schedule, chip_seq[:len(schedule)],
+                          lanes_per_chip=lanes_per_chip,
+                          queue_limit=queue_limit)
 
     @settings(max_examples=20, deadline=None)
     @given(st.lists(st.integers(0, 5), min_size=1, max_size=8))
