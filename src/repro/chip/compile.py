@@ -104,12 +104,19 @@ class StreamLayer:
     differential-pair + fold pipeline as any weight), not a free
     einsum reduction. ``levels`` gives each combine level's static
     (groups, fan_in) shape; empty when the layer fits the core rows.
+
+    ``drift`` (crossbar layers under a drifting NoiseModel only) holds
+    the per-cell conductance relaxation rates; streaming applies
+    ``exp(-drift · age)`` to the tile grid, where ``age`` counts items
+    streamed since the last programming event. None everywhere else —
+    the plan (and its jit trace) is then exactly the ideal one.
     """
     tiles: Any                     # CrossbarParams | DigitalParams
     combine: Tuple[jax.Array, ...]           # (fan_in,) f32 per level
     bias: jax.Array                          # (d_out,) f32
     activation: str = _static()
     levels: Tuple[Tuple[int, int], ...] = _static()
+    drift: Optional[jax.Array] = None        # per-cell rates | None
 
 
 def _combiner_levels(n_chunks: int, geom: CoreGeometry,
@@ -145,19 +152,28 @@ def _combiner_levels(n_chunks: int, geom: CoreGeometry,
 
 
 def _layer_plan(lp, bias: jax.Array, activation: str,
-                device: DeviceModel) -> StreamLayer:
+                device: DeviceModel, *, noise=None,
+                layer: int = 0) -> StreamLayer:
     if isinstance(lp, CrossbarParams):
         R = lp.gp.shape[0]
         geom = CoreGeometry(lp.geom_rows, lp.geom_cols)
         combine, levels = _combiner_levels(R, geom, device) if R > 1 \
             else ((), ())
+        drift = None
+        if noise is not None and noise.has_drift:
+            # per-cell relaxation rates (epoch-independent: retention
+            # is a device property). Combiner neurons are left ideal —
+            # their all-ones encodings drift uniformly, which folds
+            # into a common positive factor the activations ignore.
+            drift = noise.drift_field(lp.gp.shape, layer=layer)
         return StreamLayer(lp, combine, bias.astype(jnp.float32),
-                           activation, levels)
+                           activation, levels, drift)
     return StreamLayer(lp, (), bias.astype(jnp.float32), activation, ())
 
 
 def _crossbar_partials(p: CrossbarParams, x: jax.Array,
-                       use_kernel: bool) -> jax.Array:
+                       use_kernel: bool,
+                       decay: Optional[jax.Array] = None) -> jax.Array:
     """Sub-neuron stage: per-row-chunk partial dot products.
 
     x (B, d_in) → (B, R, d_out). Identical tile arithmetic to
@@ -171,18 +187,26 @@ def _crossbar_partials(p: CrossbarParams, x: jax.Array,
     xf = x.astype(cdtype)
     xp = jnp.pad(xf, ((0, 0), (0, R * rows - p.d_in)))
     xt = xp.reshape(-1, R, rows)
+    gp, gn = p.gp, p.gn
+    if decay is not None:
+        # temporal drift: both pair devices relax toward G_OFF with
+        # the cell's own rate; the program-time fold `scale` is frozen
+        # physical state, so the decay is an uncorrected error — the
+        # accuracy loss closed-loop recalibration exists to repair
+        gp = gp * decay
+        gn = gn * decay
     if use_kernel:
         # the fused kernel computes one row-chunk's (B, C·cols) slab;
         # vmap over the chunk axis keeps the partials separate for the
         # combiner stage while still running the Pallas hot path
         from repro.kernels import ops as kops
         parts = jax.vmap(
-            lambda xr, gp, gn, sc: kops.crossbar_mvm(
-                xr[:, None, :], gp[None], gn[None], sc[None]),
+            lambda xr, gpr, gnr, sc: kops.crossbar_mvm(
+                xr[:, None, :], gpr[None], gnr[None], sc[None]),
             in_axes=(1, 0, 0, 0), out_axes=1)(
-                xt, p.gp, p.gn, p.scale)
+                xt, gp, gn, p.scale)
     else:
-        w_eff = ((p.gp - p.gn) * p.scale[:, :, None, :]).astype(cdtype)
+        w_eff = ((gp - gn) * p.scale[:, :, None, :]).astype(cdtype)
         parts = jnp.einsum("brk,rckn->brcn", xt, w_eff,
                            preferred_element_type=jnp.float32)
         parts = parts.reshape(xt.shape[0], R, C * cols)
@@ -190,12 +214,17 @@ def _crossbar_partials(p: CrossbarParams, x: jax.Array,
 
 
 def _apply_stream_layer(layer: StreamLayer, x: jax.Array,
-                        use_kernel: bool) -> jax.Array:
+                        use_kernel: bool,
+                        age: Optional[jax.Array] = None) -> jax.Array:
     if isinstance(layer.tiles, DigitalParams):
         return digital_apply(layer.tiles, x, bias=layer.bias,
                              activation=layer.activation,
                              use_kernel=use_kernel)
-    parts = _crossbar_partials(layer.tiles, x, use_kernel)  # (B, R, d)
+    decay = None
+    if layer.drift is not None and age is not None:
+        decay = jnp.exp(-layer.drift * age)
+    parts = _crossbar_partials(layer.tiles, x, use_kernel,
+                               decay)            # (B, R, d)
     for w, (groups, fan_in) in zip(layer.combine, layer.levels):
         B, K, d = parts.shape
         pad = groups * fan_in - K
@@ -212,11 +241,19 @@ def _apply_stream_layer(layer: StreamLayer, x: jax.Array,
 
 def stream_pipeline(plan: Tuple[StreamLayer, ...], x: jax.Array,
                     use_kernel: bool = False,
-                    replication: int = 1) -> jax.Array:
+                    replication: int = 1,
+                    age: Optional[jax.Array] = None) -> jax.Array:
     """Stage-ordered evaluation of the whole mapped pipeline, with
     replica fan-out: the batch is dealt across the ``replication``
     identical pipeline copies (§V.C), each streaming its shard through
     the same programmed image.
+
+    ``age`` (a traced f32 scalar: items streamed since programming)
+    activates the per-cell drift decay on layers that carry a
+    ``drift`` field; it is a traced value, so a drifting chip keeps
+    ONE jit trace while aging. Aging is batch-granular — every item in
+    a call sees the batch's entry age (the within-batch spread is
+    ≤ batch/rate seconds of drift, negligible at the paper's rates).
 
     Un-jitted on purpose: :meth:`CompiledChip.stream` wraps it in the
     module-level jit below, and ``repro.fleet.shard`` calls it inside a
@@ -225,7 +262,7 @@ def stream_pipeline(plan: Tuple[StreamLayer, ...], x: jax.Array,
     def replica(xb):
         h = xb
         for layer in plan:
-            h = _apply_stream_layer(layer, h, use_kernel)
+            h = _apply_stream_layer(layer, h, use_kernel, age)
         return h
 
     B = x.shape[0]
@@ -283,6 +320,11 @@ class CompiledChip:
     # how the plan was encoded (weight_bits/device/r_seg) — what
     # reprogram_chip must reuse for a weights-ONLY swap to hold
     program_kw: Optional[dict] = None
+    # the variability model the chip was compiled under (None = ideal
+    # devices). Static compile metadata like program_kw; the mutable
+    # drift state (items streamed since programming) lives in
+    # __dict__ host-side, NOT in the pytree.
+    noise: Optional[Any] = None
 
     # ------------------------------------------------------------ #
     @property
@@ -293,13 +335,41 @@ class CompiledChip:
     def total_cores(self) -> int:
         return self.mapping.total_cores
 
+    # -------- drift age (host-side mutable state) ---------------- #
+    @property
+    def items_streamed(self) -> int:
+        """Items streamed since the last programming event — the
+        drift clock. Always 0 for chips without a drifting noise
+        model (the counter is only advanced when drift is active)."""
+        return self.__dict__.get("_items_streamed", 0)
+
+    @property
+    def has_drift(self) -> bool:
+        return self.noise is not None and self.noise.has_drift
+
+    def reset_age(self) -> None:
+        """Reset the drift clock, as a (re)programming event does."""
+        self.__dict__["_items_streamed"] = 0
+
+    def advance_age(self, items: int) -> None:
+        """Advance the drift clock by ``items`` streamed elsewhere
+        (``repro.fleet.shard`` streams the replicated plan itself and
+        accounts the aging back onto the source chip)."""
+        if self.has_drift:
+            self.__dict__["_items_streamed"] = \
+                self.items_streamed + int(items)
+
     def stream(self, x: jax.Array, *, use_kernel: bool = False,
-               fan_out: bool = True) -> jax.Array:
+               fan_out: bool = True,
+               advance_age: bool = True) -> jax.Array:
         """Stream a batch through the mapped, programmed pipeline.
 
         x: (..., d_in) → (..., d_out). ``fan_out=False`` pins the whole
         batch onto one replica (the other replicas idle), e.g. to
-        measure single-replica latency.
+        measure single-replica latency. Under a drifting noise model
+        the call evaluates at the chip's current age and then advances
+        the drift clock by the batch size; ``advance_age=False`` makes
+        it a pure probe (canary scoring must not itself age the chip).
         """
         if self.plan is None:
             raise ValueError(
@@ -311,8 +381,13 @@ class CompiledChip:
         lead = x.shape[:-1]
         xf = x.reshape(-1, x.shape[-1])
         rep = self.mapping.replication if fan_out else 1
+        age = None
+        if self.has_drift:
+            age = jnp.asarray(float(self.items_streamed), jnp.float32)
         out = _stream(self.plan, xf, use_kernel=use_kernel,
-                      replication=rep)
+                      replication=rep, age=age)
+        if age is not None and advance_age:
+            self.advance_age(xf.shape[0])
         return out.reshape(*lead, out.shape[-1]).astype(x.dtype)
 
     def __call__(self, x: jax.Array, **kw) -> jax.Array:
@@ -349,15 +424,16 @@ def _chip_flatten(chip: CompiledChip):
         static = _ChipStatic((chip.system, chip.geom, chip.mapping,
                               chip.route, chip.items_per_second,
                               chip.tsv_bits_per_item, chip.dims,
-                              chip.program_kw))
+                              chip.program_kw, chip.noise))
         chip.__dict__["_static"] = static
     return (chip.plan,), static
 
 
 def _chip_unflatten(static: _ChipStatic, children) -> CompiledChip:
-    (system, geom, mapping, route, rate, tsv, dims, pkw) = static.value
+    (system, geom, mapping, route, rate, tsv, dims, pkw,
+     noise) = static.value
     chip = CompiledChip(system, geom, mapping, route, rate, tsv,
-                        children[0], dims, pkw)
+                        children[0], dims, pkw, noise)
     chip.__dict__["_static"] = static
     return chip
 
@@ -443,6 +519,7 @@ def compile_chip(networks: NetworksLike, *,
                  device: DeviceModel = DEFAULT_DEVICE,
                  noise_key: Optional[jax.Array] = None,
                  r_seg: float = 0.0,
+                 noise=None,
                  sensor_flags: Optional[Sequence[bool]] = None,
                  deps: Optional[Sequence[Sequence[int]]] = None,
                  tsv_bits_per_item: Optional[float] = None,
@@ -466,6 +543,14 @@ def compile_chip(networks: NetworksLike, *,
     fan-out to the application's real-time rate (§V.C) and is validated
     against the routed TDM link capacity: an un-routable rate warns
     (:class:`ChipRateWarning`) or, with ``strict_rate=True``, raises.
+
+    ``noise`` (a ``repro.variability.NoiseModel``) compiles the chip
+    onto NON-ideal devices: programming-time effects perturb the
+    encoding when this compile runs the encoder (MLPSpec + params),
+    and temporal drift attaches per-cell relaxation rates the stream
+    path evaluates against the chip's age. An ideal model (all
+    effects zero) is structurally skipped — bit-identical to
+    ``noise=None``. Digital (SRAM) systems ignore the model.
     """
     system = normalize_system(system, context="compile_chip")
     mode = system_mode(system)
@@ -493,7 +578,8 @@ def compile_chip(networks: NetworksLike, *,
             prog = program_mlp(params, networks, mode=mode,
                                geom=geom or _default_geom(system),
                                device=device, weight_bits=weight_bits,
-                               noise_key=noise_key, r_seg=r_seg)
+                               noise_key=noise_key, r_seg=r_seg,
+                               noise=noise, noise_epoch=0)
             encoded_here = True
     else:
         if params is not None:
@@ -514,26 +600,34 @@ def compile_chip(networks: NetworksLike, *,
 
     plan: Optional[Tuple[StreamLayer, ...]] = None
     if prog is not None:
-        plan = program_plan(prog, device=device)
+        plan = program_plan(prog, device=device, noise=noise)
     # encoding knobs recorded only when this compile ran the encoder —
     # for a caller-programmed MLP they describe nothing (reprogram_chip
     # then demands them explicitly instead of guessing)
     return CompiledChip(system, mapping.geom, mapping, route,
                         items_per_second, tsv_bits_per_item, plan, dims,
                         dict(weight_bits=weight_bits, device=device,
-                             r_seg=r_seg) if encoded_here else None)
+                             r_seg=r_seg) if encoded_here else None,
+                        noise)
 
 
 def program_plan(prog: ProgrammedMLP, *,
-                 device: DeviceModel = DEFAULT_DEVICE
-                 ) -> Tuple[StreamLayer, ...]:
+                 device: DeviceModel = DEFAULT_DEVICE,
+                 noise=None) -> Tuple[StreamLayer, ...]:
     """The programming half of a compile, alone: turn an already
     programmed MLP into the streamable per-layer plan (tiles +
     Fig. 11 combiner neurons). ``compile_chip`` calls this after
-    map+route; :func:`reprogram_chip` calls it INSTEAD of them."""
-    return tuple(_layer_plan(lp, b, act, device)
-                 for lp, b, act in zip(prog.layers, prog.biases,
-                                       prog.activations))
+    map+route; :func:`reprogram_chip` calls it INSTEAD of them.
+    ``noise`` attaches per-cell drift rates to crossbar layers when
+    the model drifts (programming-time effects belong to
+    ``program_mlp``, which already ran)."""
+    return tuple(_layer_plan(lp, b, act, device, noise=noise, layer=i)
+                 for i, (lp, b, act) in
+                 enumerate(zip(prog.layers, prog.biases,
+                               prog.activations)))
+
+
+_KEEP_NOISE = object()     # sentinel: "reuse the chip's own model"
 
 
 def reprogram_chip(chip: CompiledChip, params, *,
@@ -541,7 +635,8 @@ def reprogram_chip(chip: CompiledChip, params, *,
                    weight_bits: Optional[int] = None,
                    device: Optional[DeviceModel] = None,
                    noise_key: Optional[jax.Array] = None,
-                   r_seg: Optional[float] = None) -> CompiledChip:
+                   r_seg: Optional[float] = None,
+                   noise=_KEEP_NOISE) -> CompiledChip:
     """Swap a compiled chip's weights WITHOUT recompiling the fabric.
 
     The paper's §III.D economics split a chip's life into program-once
@@ -561,6 +656,12 @@ def reprogram_chip(chip: CompiledChip, params, *,
     reprogram re-encodes exactly the way the original programming did
     (``noise_key`` is per-programming-event, so it never defaults to
     the old one).
+
+    The chip's variability model carries over by default (pass
+    ``noise=`` to change it, including ``None`` to go ideal). A
+    reprogram is a new programming *epoch*: write noise re-rolls,
+    stuck cells persist, and the drift clock resets to age 0 — the
+    physics that makes closed-loop recalibration work.
     """
     if chip.plan is None:
         raise ValueError(
@@ -605,10 +706,13 @@ def reprogram_chip(chip: CompiledChip, params, *,
             raise ValueError(
                 f"reprogram_chip: layer {i} weights {tuple(p['w'].shape)}"
                 f" do not match the compiled fabric {want}")
+    if noise is _KEEP_NOISE:
+        noise = chip.noise
+    epoch = chip.__dict__.get("_noise_epoch", 0) + 1
     prog = program_mlp(params, spec, mode=system_mode(chip.system),
                        geom=chip.geom, device=device,
                        weight_bits=weight_bits, noise_key=noise_key,
-                       r_seg=r_seg)
+                       r_seg=r_seg, noise=noise, noise_epoch=epoch)
     if explicit_spec is None:
         # tile programming is activation-independent, but the plan
         # records one activation PER layer — preserve the compiled
@@ -617,8 +721,14 @@ def reprogram_chip(chip: CompiledChip, params, *,
         # heterogeneous ProgrammedMLP would be silently re-activated)
         prog = dataclasses.replace(
             prog, activations=tuple(l.activation for l in chip.plan))
-    return dataclasses.replace(chip, plan=program_plan(prog,
-                                                       device=device))
+    new = dataclasses.replace(chip,
+                              plan=program_plan(prog, device=device,
+                                                noise=noise),
+                              noise=noise)
+    # fresh object → fresh __dict__: the drift clock starts at age 0;
+    # remember the epoch so the NEXT reprogram re-rolls write noise
+    new.__dict__["_noise_epoch"] = epoch
+    return new
 
 
 def _default_geom(system: str) -> CoreGeometry:

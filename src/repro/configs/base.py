@@ -8,8 +8,8 @@ maps ``--arch <id>`` strings to these.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Tuple
 
 
 def _round_up(x: int, m: int) -> int:

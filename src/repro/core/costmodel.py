@@ -24,7 +24,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional
 
-from repro.configs.paper_apps import AppConfig, APPS, PAPER_TABLES
+from repro.configs.paper_apps import AppConfig, APPS
 from repro.core import routing as routing_lib
 from repro.core.mapping import (Mapping, map_networks, nn_macs,
                                 risc_cores_needed)

@@ -24,7 +24,7 @@ of rows — Fig. 5 — which is what makes the numerator signed).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

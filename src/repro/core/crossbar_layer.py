@@ -112,12 +112,22 @@ def program_layer(w: jax.Array, *, geom: CoreGeometry = MEMRISTOR_GEOM,
                   quantize: bool = True,
                   noise_key: Optional[jax.Array] = None,
                   noise_tol: float = 1.0 / 256.0,
-                  r_seg: float = 0.0) -> CrossbarParams:
+                  r_seg: float = 0.0,
+                  noise=None, noise_layer: int = 0,
+                  noise_epoch: int = 0) -> CrossbarParams:
     """Tile + differential-encode + (optionally) perturb like the
     feedback-write residual, then fold all input-independent scales.
     w: (d_in, d_out) float. Wire resistance (r_seg > 0) is a
     program-time transform of the conductances, so it is folded here —
-    evaluation always computes the ideal datapath."""
+    evaluation always computes the ideal datapath.
+
+    ``noise`` (a ``repro.variability.NoiseModel``, duck-typed so core
+    never imports upward) applies the structured non-idealities:
+    lognormal write error (re-rolled per ``noise_epoch``, i.e. per
+    programming event), persistent stuck cells, and IR-drop
+    attenuation. An ideal model is skipped entirely — bit-identical
+    to ``noise=None``. Temporal drift is NOT applied here; it is a
+    stream-time effect handled by ``repro.chip.stream_pipeline``."""
     d_in, d_out = w.shape
     R = math.ceil(d_in / geom.rows)
     C = math.ceil(d_out / geom.cols)
@@ -140,6 +150,15 @@ def program_layer(w: jax.Array, *, geom: CoreGeometry = MEMRISTOR_GEOM,
         kp, kn = jax.random.split(noise_key)
         gp = device.clip(gp + programming_noise(kp, gp.shape, cfg))
         gn = device.clip(gn + programming_noise(kn, gn.shape, cfg))
+    if noise is not None and not noise.is_ideal:
+        gp, gn = noise.perturb(gp, gn, device, layer=noise_layer,
+                               epoch=noise_epoch)
+        if noise.ir_drop_r_seg:
+            att = wire_attenuation(geom.rows, geom.cols,
+                                   float(device.g_on),
+                                   noise.ir_drop_r_seg)
+            gp = gp * att
+            gn = gn * att
     if r_seg:
         att = wire_attenuation(geom.rows, geom.cols,
                                float(device.g_on), r_seg)
@@ -331,8 +350,12 @@ def program_mlp(params, spec: MLPSpec, *, mode: str = "crossbar",
                 device: DeviceModel = DEFAULT_DEVICE,
                 weight_bits: int = 8,
                 noise_key: Optional[jax.Array] = None,
-                r_seg: float = 0.0) -> ProgrammedMLP:
-    """Program every layer of the MLP once (crossbar or SRAM mode)."""
+                r_seg: float = 0.0,
+                noise=None, noise_epoch: int = 0) -> ProgrammedMLP:
+    """Program every layer of the MLP once (crossbar or SRAM mode).
+    ``noise``/``noise_epoch`` thread the variability model into each
+    crossbar layer's programming (digital mode ignores them: SRAM
+    writes are noise-free in this model)."""
     if mode not in ("crossbar", "digital"):
         raise ValueError(f"program_mlp: unknown mode {mode!r}")
     n = len(params)
@@ -343,7 +366,9 @@ def program_mlp(params, spec: MLPSpec, *, mode: str = "crossbar",
             if noise_key is not None:
                 noise_key, key = jax.random.split(noise_key)
             layers.append(program_layer(p["w"], geom=geom, device=device,
-                                        noise_key=key, r_seg=r_seg))
+                                        noise_key=key, r_seg=r_seg,
+                                        noise=noise, noise_layer=i,
+                                        noise_epoch=noise_epoch))
         else:
             layers.append(program_digital(p["w"], bits=weight_bits))
         biases.append(p["b"].astype(jnp.float32))

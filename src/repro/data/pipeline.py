@@ -15,7 +15,7 @@ floor within a few hundred steps — see examples/quickstart.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -37,7 +37,7 @@ def selftest(verbose: bool = True) -> bool:
     from repro.core.crossbar_layer import MLPSpec, mlp_init
     from repro.data.pipeline import SensorPipeline
     from repro.deploy import AppSpec, DeploymentSpec, deploy
-    from repro.fleet import FleetRouter, StreamSource, shard_chip
+    from repro.fleet import StreamSource, shard_chip
 
     ok = True
 

@@ -17,10 +17,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Union
 
-import numpy as np
-
-from repro.chip.compile import (CompiledChip, compile_chip,
-                                reprogram_chip)
+from repro.chip.compile import CompiledChip, compile_chip
 from repro.core.crossbar_layer import (MLPSpec, ProgrammedMLP, mlp_init)
 from repro.deploy.report import DeploymentReport, deployment_report
 from repro.deploy.router import (DeploymentStats,
@@ -82,6 +79,7 @@ class _Member:
     chip: CompiledChip
     sharded: Optional[ShardedChip]
     mlp_spec: Optional[MLPSpec]         # for reprogram
+    params: Any = None                  # last-programmed weights
 
 
 class Deployment:
@@ -102,11 +100,14 @@ class Deployment:
         self._closed = False
 
         self._members: Dict[str, _Member] = {}
+        self._monitors: Dict[str, Any] = {}
+        self._recals: Dict[str, Any] = {}
         for app in spec.apps:
             networks, params, kw = _resolve_network(app)
             chip = compile_chip(networks, params=params,
                                 system=app.system,
                                 weight_bits=app.weight_bits,
+                                noise=app.noise,
                                 strict_rate=spec.strict_rate, **kw)
             sharded = None
             if chip.plan is not None:
@@ -116,7 +117,7 @@ class Deployment:
                     strict_rate=spec.strict_rate)
             mlp_spec = networks if isinstance(networks, MLPSpec) else None
             self._members[app.name] = _Member(app, chip, sharded,
-                                              mlp_spec)
+                                              mlp_spec, params)
 
         streamable = {name: m.sharded
                       for name, m in self._members.items()
@@ -149,6 +150,12 @@ class Deployment:
 
     def chip(self, app: str) -> CompiledChip:
         return self._member(app).chip
+
+    def params(self, app: str):
+        """The app's last-programmed weight parameters (None for
+        tenants deployed from bare shapes or pre-programmed state) —
+        what a plain recalibration re-flashes."""
+        return self._member(app).params
 
     def _member(self, app: str) -> _Member:
         if self._closed:
@@ -213,15 +220,90 @@ class Deployment:
             sources = {next(iter(router.members)): sources}
         return router.serve(sources, max_steps=max_steps)
 
+    # ---------------- variability observability -------------------- #
+    def attach_monitor(self, app: str, canary, *, reference=None,
+                       every_steps: int = 1):
+        """Attach a :class:`repro.variability.AccuracyMonitor` to
+        ``app``: its canary batch is scored every ``every_steps``
+        engine steps (router step listener) and the series surfaces in
+        :meth:`stats` / :meth:`variability_report`. Returns the
+        monitor. The chip is resolved per probe, so live reprograms
+        are always scored against current state."""
+        self._streaming_member(app)
+        from repro.variability.monitor import AccuracyMonitor
+
+        monitor = AccuracyMonitor(lambda: self._member(app).chip,
+                                  canary, reference=reference,
+                                  every_steps=every_steps, name=app)
+        self._monitors[app] = monitor
+        self._live_router().add_step_listener(monitor.on_step)
+        return monitor
+
+    def attach_recalibration(self, app: str, *, policy=None,
+                             monitor=None, canary=None,
+                             params_fn=None, board=None,
+                             rank: int = 0, every_steps: int = 1):
+        """Close the loop for ``app``: SLO breaches on the (attached
+        or given) monitor trigger live :meth:`reprogram` — zero
+        compile passes, journaled on ``board`` (a
+        :class:`repro.fleet.ha.HeartbeatBoard`) when given. Returns
+        the :class:`repro.variability.Recalibrator`."""
+        from repro.variability.recal import Recalibrator
+
+        if monitor is None:
+            monitor = self._monitors.get(app)
+        if monitor is None:
+            if canary is None:
+                raise ValueError(
+                    "attach_recalibration: no monitor attached for "
+                    f"{app!r} — pass canary= (or monitor=) so breach "
+                    "detection has something to score")
+            monitor = self.attach_monitor(app, canary,
+                                          every_steps=every_steps)
+        recal = Recalibrator(self, app, monitor, policy,
+                             params_fn=params_fn, board=board,
+                             rank=rank)
+        self._recals[app] = recal
+        self._live_router().add_step_listener(recal.on_step)
+        return recal
+
+    def variability_report(self) -> Dict[str, Any]:
+        """Per-app drift/accuracy series + recalibration events — the
+        non-ideal-device companion to the Tables II–VI report."""
+        out: Dict[str, Any] = {}
+        for app in set(self._monitors) | set(self._recals):
+            m = self._members.get(app)
+            entry: Dict[str, Any] = {
+                "noise": dataclasses.asdict(m.spec.noise)
+                if m is not None and m.spec.noise is not None else None,
+                "items_streamed": m.chip.items_streamed
+                if m is not None else 0,
+            }
+            monitor = self._monitors.get(app)
+            if monitor is not None:
+                entry["monitor"] = monitor.summary()
+            recal = self._recals.get(app)
+            if recal is not None:
+                entry["recalibration"] = recal.summary()
+            out[app] = entry
+        return out
+
+    def _with_variability(self,
+                          stats: DeploymentStats) -> DeploymentStats:
+        if not self._monitors and not self._recals:
+            return stats
+        return dataclasses.replace(
+            stats, variability=self.variability_report())
+
     # ---------------- accounting ----------------------------------- #
     def stats(self) -> DeploymentStats:
-        return self._live_router().stats()
+        return self._with_variability(self._live_router().stats())
 
     def stats_global(self) -> DeploymentStats:
         router = self._live_router()
         if hasattr(router, "stats_global"):
-            return router.stats_global()
-        return router.stats()
+            return self._with_variability(router.stats_global())
+        return self._with_variability(router.stats())
 
     def report(self) -> DeploymentReport:
         """Multi-app Tables II–VI composition (+ served stats when the
@@ -296,6 +378,7 @@ class Deployment:
         kw = {"spec": m.mlp_spec} if m.mlp_spec is not None else {}
         m.sharded.reprogram(params, **kw)
         m.chip = m.sharded.chip
+        m.params = params
 
     def close(self) -> None:
         """Tear the deployment down: drop plan/mesh references so
@@ -304,6 +387,8 @@ class Deployment:
             return
         self._closed = True
         self._members.clear()
+        self._monitors.clear()
+        self._recals.clear()
         self.router = None
         self.mesh = None
 

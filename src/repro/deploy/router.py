@@ -36,13 +36,26 @@ from repro.serving.engine import (ItemRequest, KeyedItemStreamScheduler,
 class DeploymentStats:
     """Per-app rows plus the fleet-wide roll-up, from the same engine
     counters — the per-app requests/items/rejected/lanes sum EXACTLY
-    to the fleet row by construction (asserted in the selftest)."""
+    to the fleet row by construction (asserted in the selftest).
+
+    ``variability`` (set by ``Deployment.stats`` when accuracy
+    monitors / recalibrators are attached) carries the per-app canary
+    accuracy series and recalibration events — the non-ideal-device
+    observability plane next to the throughput counters."""
     apps: Dict[str, RouterStats]
     fleet: RouterStats
+    variability: Optional[Dict[str, Any]] = None
 
     def __str__(self) -> str:
         lines = [f"  {name:>12s}: {stats}"
                  for name, stats in self.apps.items()]
+        for name, entry in (self.variability or {}).items():
+            monitor = entry.get("monitor") or {}
+            recal = entry.get("recalibration") or {}
+            lines.append(
+                f"  {name:>12s}: canary_acc="
+                f"{monitor.get('latest_accuracy')} "
+                f"recals={recal.get('recals', 0)}")
         return "\n".join([f"DeploymentStats[fleet: {self.fleet}]"]
                          + lines)
 

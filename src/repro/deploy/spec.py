@@ -13,7 +13,7 @@ what lane/admission budget — and one fabric topology for all of them;
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Optional, Tuple
 
 from repro.core.systems import normalize_system
 
@@ -40,6 +40,14 @@ class AppSpec:
     default). ``analytic=True`` deploys a report-only tenant — no
     weight synthesis, no tile programming — for sizing studies that
     never stream.
+
+    ``noise`` (a :class:`repro.variability.NoiseModel`, or None for
+    ideal devices) compiles this tenant onto non-ideal memristors:
+    programming-time write error / stuck cells / IR drop perturb the
+    tile encoding and temporal drift ages the streamed arithmetic —
+    the operating regime ``Deployment.attach_monitor`` /
+    ``attach_recalibration`` exist for. The all-zero model is
+    bit-identical to ``noise=None``; digital tenants ignore it.
     """
     name: str
     network: Any
@@ -51,6 +59,7 @@ class AppSpec:
     seed: int = 0
     weight_bits: int = 8
     analytic: bool = False
+    noise: Any = None
 
     def __post_init__(self):
         if not self.name or not isinstance(self.name, str):
@@ -112,7 +121,7 @@ def single_app(network, params=None, *, name: str = "app",
     compile→shard→route path as one call)."""
     app_kw = {k: kw.pop(k) for k in
               ("items_per_second", "lanes_per_chip", "queue_limit",
-               "seed", "weight_bits", "analytic") if k in kw}
+               "seed", "weight_bits", "analytic", "noise") if k in kw}
     return DeploymentSpec(
         apps=(AppSpec(name, network, params=params, system=system,
                       **app_kw),),

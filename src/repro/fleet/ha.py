@@ -45,7 +45,7 @@ import dataclasses
 import json
 import os
 import time
-from typing import Any, Dict, List, Optional, Sequence, Set
+from typing import Dict, List, Optional, Sequence, Set
 
 import numpy as np
 
@@ -118,6 +118,7 @@ class HeartbeatBoard:
     def __init__(self, root: str):
         self.root = str(root)
         os.makedirs(self.root, exist_ok=True)
+        self._event_n = 0
 
     def publish(self, rank: int, payload: dict) -> None:
         path = board_path(self.root, rank)
@@ -139,6 +140,45 @@ class HeartbeatBoard:
                 except ValueError:
                     pass
         return sorted(out)
+
+    # ---------------- event journal ------------------------------- #
+    # membership changes live in the rank heartbeats; other operational
+    # events (recalibration, from repro.variability) are journaled as
+    # their OWN append-only atomic files so they can never clobber a
+    # heartbeat and survive arbitrarily many publishes.
+    def publish_event(self, kind: str, payload: dict) -> str:
+        """Journal one operational event (atomic tmp + rename, like
+        heartbeats). Files are ``evt_<seq>_<pid>_<kind>.json`` under
+        ``root/events``; the (per-process seq, pid) pair makes names
+        collision-free across writers. Returns the file path."""
+        evdir = os.path.join(self.root, "events")
+        os.makedirs(evdir, exist_ok=True)
+        name = f"evt_{self._event_n:06d}_{os.getpid()}_{kind}.json"
+        self._event_n += 1
+        path = os.path.join(evdir, name)
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(dict(payload, kind=kind), f)
+        os.replace(tmp, path)
+        return path
+
+    def events(self, kind: Optional[str] = None) -> List[dict]:
+        """All journaled events (optionally one ``kind``), ordered by
+        (writer sequence, pid) — a stable total order; cross-process
+        interleaving is whatever the sequence numbers say, which is
+        enough for the journal's audit purpose."""
+        evdir = os.path.join(self.root, "events")
+        if not os.path.isdir(evdir):
+            return []
+        out = []
+        for name in sorted(os.listdir(evdir)):
+            if not (name.startswith("evt_") and name.endswith(".json")):
+                continue
+            with open(os.path.join(evdir, name)) as f:
+                ev = json.load(f)
+            if kind is None or ev.get("kind") == kind:
+                out.append(ev)
+        return out
 
 
 class FailureDetector:

@@ -158,11 +158,21 @@ class TimedStepMixin:
     _t_start: Optional[float] = None
     _t_last: float = 0.0
     _ha_guard = None
+    _step_listeners: tuple = ()
 
     def attach_ha(self, guard) -> None:
         """Attach a :class:`repro.fleet.ha.StepGuard` (heartbeat +
         step-deadline failure detection around every engine step)."""
         self._ha_guard = guard
+
+    def add_step_listener(self, fn) -> None:
+        """Register ``fn(router)`` to run after every completed engine
+        step — the observability hook ``repro.variability`` uses for
+        canary scoring and closed-loop recalibration. Listeners run on
+        the engine thread between steps (the only point where a live
+        reprogram is safe) and their exceptions propagate: a failing
+        monitor is a serving failure, not a silent skip."""
+        self._step_listeners = (*self._step_listeners, fn)
 
     def step(self) -> int:
         if self._t_start is None:
@@ -171,6 +181,8 @@ class TimedStepMixin:
         emitted = step_fn() if self._ha_guard is None \
             else self._ha_guard.run_step(step_fn)
         self._t_last = time.perf_counter()
+        for fn in self._step_listeners:
+            fn(self)
         return emitted
 
     def _wall_s(self) -> float:

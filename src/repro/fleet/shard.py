@@ -119,7 +119,7 @@ class ShardedChip:
             # counts validate_stream_rate(1) → __post_init__(2) →
             # dataclass __init__(3) → shard_chip(4) → user(5)
             stacklevel=5)
-        self._fns: Dict[bool, callable] = {}
+        self._fns: Dict[tuple, callable] = {}
         # program the fleet ONCE: replicate the tile image onto every
         # mesh device at shard time (§III.D program-once, fleet-level).
         # Without this, every stream call would re-transfer the plan
@@ -160,20 +160,43 @@ class ShardedChip:
     def total_cores(self) -> int:
         return self.chip.total_cores * self.n_chips
 
+    @property
+    def has_drift(self) -> bool:
+        return self.chip.has_drift
+
+    def _age(self) -> Optional[jax.Array]:
+        """The fleet's drift age, as a traced scalar (None when the
+        chip's devices do not drift). Every member replica shares the
+        source chip's clock: the fleet members are copies of the SAME
+        programmed (and thus equally aged) physical image."""
+        if not self.has_drift:
+            return None
+        return jnp.asarray(float(self.chip.items_streamed), jnp.float32)
+
     # ------------------------------------------------------------ #
-    def _fn(self, use_kernel: bool):
-        fn = self._fns.get(use_kernel)
+    def _fn(self, use_kernel: bool, drift: bool = False):
+        fn = self._fns.get((use_kernel, drift))
         if fn is None:
             rep = self.chip.replication
 
-            def per_chip(plan, xs):
-                return stream_pipeline(plan, xs, use_kernel=use_kernel,
-                                       replication=rep)
+            if drift:
+                def per_chip(plan, xs, age):
+                    return stream_pipeline(plan, xs,
+                                           use_kernel=use_kernel,
+                                           replication=rep, age=age)
 
+                in_specs = (P(), P(self.axis), P())
+            else:
+                def per_chip(plan, xs):
+                    return stream_pipeline(plan, xs,
+                                           use_kernel=use_kernel,
+                                           replication=rep)
+
+                in_specs = (P(), P(self.axis))
             fn = jax.jit(shard_map(per_chip, mesh=self.mesh,
-                                   in_specs=(P(), P(self.axis)),
+                                   in_specs=in_specs,
                                    out_specs=P(self.axis)))
-            self._fns[use_kernel] = fn
+            self._fns[(use_kernel, drift)] = fn
         return fn
 
     def stream_host(self, x, *, use_kernel: bool = False) -> np.ndarray:
@@ -207,7 +230,13 @@ class ShardedChip:
             xf = np.pad(xf, ((0, pad), (0, 0)))
         xs = jax.device_put(
             xf, NamedSharding(self.mesh, P(self.axis)))
-        out = np.asarray(self._fn(use_kernel)(self._plan, xs))[:B]
+        age = self._age()
+        if age is None:
+            out = np.asarray(self._fn(use_kernel)(self._plan, xs))[:B]
+        else:
+            out = np.asarray(
+                self._fn(use_kernel, True)(self._plan, xs, age))[:B]
+            self.chip.advance_age(B)
         return out.reshape(*lead, out.shape[-1])
 
     def stream_local(self, x, *, use_kernel: bool = False) -> np.ndarray:
@@ -239,7 +268,15 @@ class ShardedChip:
             xf = np.pad(xf, ((0, pad), (0, 0)))
         sharding = NamedSharding(self.mesh, P(self.axis))
         xs = make_array_from_process_local_data(sharding, xf)
-        out = self._fn(use_kernel)(self._plan, xs)
+        age = self._age()
+        if age is None:
+            out = self._fn(use_kernel)(self._plan, xs)
+        else:
+            # each process advances its own copy of the clock by its
+            # OWN rows; SPMD symmetry (equal local rows per call)
+            # keeps the replicas' ages in agreement
+            out = self._fn(use_kernel, True)(self._plan, xs, age)
+            self.chip.advance_age(B)
         shards = sorted(out.addressable_shards,
                         key=lambda s: s.index[0].start or 0)
         y = np.concatenate([np.asarray(s.data) for s in shards])[:B]

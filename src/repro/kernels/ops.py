@@ -15,7 +15,6 @@ are the pure streaming-evaluate path and take the folded operands as-is.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import crossbar_mvm as _cb
 from repro.kernels import int8_matmul as _i8

@@ -25,7 +25,6 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from repro import compat
 from repro.configs import (ARCH_IDS, SHAPES_BY_NAME, applicable, get_config,

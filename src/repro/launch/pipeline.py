@@ -24,7 +24,6 @@ transpose rule), with the usual GPipe activation-stash memory cost.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict
 
 PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
 HBM_BW = 819e9           # B/s per chip

@@ -15,9 +15,6 @@ of depth — essential for 40-80 layer models compiled on one CPU core.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 

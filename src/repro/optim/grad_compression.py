@@ -19,8 +19,6 @@ tiny f32 psum.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Tuple
 
 import jax

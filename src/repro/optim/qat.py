@@ -11,7 +11,7 @@ programmed network matches the trained one (§III.D, Fig. 12):
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
@@ -39,9 +39,20 @@ def qat_loss_fn(loss_fn: Callable, bits: int = 8) -> Callable:
 # --------------------------------------------------------------------- #
 def train_mlp(x, y, dims, *, activation: str, weight_bits: int,
               act_bits: int, steps: int = 300, lr: float = 0.05,
-              seed: int = 0) -> Dict[str, Any]:
+              seed: int = 0, noise=None,
+              noise_seed: int = 0) -> Dict[str, Any]:
     """Small-MLP QAT trainer used by the Fig. 12 benchmark and the
-    examples. Float path when weight_bits >= 32."""
+    examples. Float path when weight_bits >= 32.
+
+    ``noise`` (a ``repro.variability.NoiseModel``) enables
+    variation-aware training (Hasan & Taha arXiv:1603.07400): each
+    step's forward sees the weights through a fresh mean-one lognormal
+    multiplier of the model's ``program_sigma`` (straight-through,
+    like fake-quant), so the found minimum is flat against programming
+    error — the "QAT-hardened" weights a recalibration policy can
+    re-flash. A None or ideal/σ=0 model leaves the trainer's
+    computation BYTE-IDENTICAL to before (the perturbation is
+    structurally skipped, not multiplied by one)."""
     from repro.core.crossbar_layer import MLPSpec, mlp_apply, mlp_init
 
     n_classes = dims[-1]
@@ -49,8 +60,22 @@ def train_mlp(x, y, dims, *, activation: str, weight_bits: int,
                    out_activation="linear")
     params = mlp_init(jax.random.PRNGKey(seed), spec)
     mode = "float" if weight_bits >= 32 else "qat"
+    sigma = 0.0 if noise is None else float(noise.program_sigma)
 
-    def loss(params, xb, yb):
+    def perturb(params, key):
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        out = []
+        for i, p in enumerate(leaves):
+            if getattr(p, "ndim", 0) >= 2:
+                k = jax.random.fold_in(key, i)
+                p = p * jnp.exp(sigma * jax.random.normal(k, p.shape)
+                                - 0.5 * sigma * sigma)
+            out.append(p)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def loss(params, xb, yb, key):
+        if sigma > 0.0:
+            params = perturb(params, key)
         logits = mlp_apply(params, xb, spec, weight_bits=weight_bits,
                            act_bits=act_bits, mode=mode)
         onehot = jax.nn.one_hot(yb, n_classes)
@@ -58,16 +83,30 @@ def train_mlp(x, y, dims, *, activation: str, weight_bits: int,
                               axis=-1))
         return ls
 
-    @jax.jit
-    def step(params, xb, yb):
-        g = jax.grad(loss)(params, xb, yb)
-        return jax.tree.map(lambda p, g: p - lr * g, params, g)
+    if sigma > 0.0:
+        @jax.jit
+        def step(params, xb, yb, key):
+            g = jax.grad(loss)(params, xb, yb, key)
+            return jax.tree.map(lambda p, g: p - lr * g, params, g)
+    else:
+        # σ=0 keeps the historical trace exactly (no dead key input,
+        # no gated multiply) — the trainer-equivalence pin relies on
+        # this path being the SAME jitted computation as always
+        @jax.jit
+        def step(params, xb, yb):
+            g = jax.grad(loss)(params, xb, yb, None)
+            return jax.tree.map(lambda p, g: p - lr * g, params, g)
 
     n = x.shape[0]
     bs = min(128, n)
+    nkey = jax.random.PRNGKey(noise_seed)
     for i in range(steps):
         lo = (i * bs) % max(n - bs, 1)
-        params = step(params, x[lo:lo + bs], y[lo:lo + bs])
+        if sigma > 0.0:
+            params = step(params, x[lo:lo + bs], y[lo:lo + bs],
+                          jax.random.fold_in(nkey, i))
+        else:
+            params = step(params, x[lo:lo + bs], y[lo:lo + bs])
     return {"params": params, "spec": spec}
 
 

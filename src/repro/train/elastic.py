@@ -21,9 +21,8 @@ from typing import Any, Optional, Tuple
 import jax
 
 from repro.compat import make_auto_mesh
-from repro.launch import mesh as mesh_lib
 from repro.launch.rules import make_rules
-from repro.sharding import axis_rules, tree_shardings
+from repro.sharding import axis_rules
 from repro.train import checkpoint as ckpt_lib
 
 

@@ -3,7 +3,7 @@ prefill and decode. These are the exact computations the dry-run lowers
 and the train loop executes."""
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -16,14 +16,13 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import os
 import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import numpy as np
 
-from repro.data.pipeline import PipelineState, TokenPipeline
+from repro.data.pipeline import TokenPipeline
 from repro.train import checkpoint as ckpt_lib
 
 

@@ -1,0 +1,32 @@
+"""repro.variability — non-ideal memristor devices, accuracy
+observability, and closed-loop recalibration (ROADMAP open item 5).
+
+Three pieces, layered on the existing verbs instead of forking them:
+
+  * :class:`NoiseModel` — programming-time lognormal write error,
+    persistent stuck-at-G_ON/G_OFF cells, IR-drop attenuation, and
+    per-item temporal drift. Compile any chip onto non-ideal devices
+    with ``compile_chip(..., noise=...)`` / ``AppSpec(noise=...)``;
+    the all-zero model is bit-identical to no model at all.
+  * :class:`AccuracyMonitor` — per-app canary batches scored during
+    serving via the router step-listener hook, exposed through
+    ``Deployment.stats().variability`` and ``variability_report``.
+  * :class:`Recalibrator` / :class:`RecalPolicy` — accuracy-SLO
+    breach → live ``Deployment.reprogram`` (zero compile passes,
+    asserted via ``compile_count()``), journaled on the PR 6 HA
+    board like membership changes.
+
+``python -m repro.variability --selftest`` exercises the full loop.
+"""
+from repro.variability.monitor import AccuracyMonitor, CanarySample
+from repro.variability.noise import NoiseModel
+from repro.variability.recal import RecalEvent, RecalPolicy, Recalibrator
+
+__all__ = [
+    "AccuracyMonitor",
+    "CanarySample",
+    "NoiseModel",
+    "RecalEvent",
+    "RecalPolicy",
+    "Recalibrator",
+]

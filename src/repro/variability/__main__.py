@@ -1,0 +1,149 @@
+"""CI smoke entry point:
+PYTHONPATH=src python -m repro.variability --selftest
+
+Exercises the whole non-ideal-device story end to end: σ=0 bit-
+identity against the ideal path (memristor and digital), programming
+noise / stuck-cell perturbation, temporal drift aging the streamed
+arithmetic, and the closed loop — canary monitor → SLO breach → live
+zero-recompile recalibration journaled on the HA board. Exit code 0
+iff all checks pass.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+
+
+def selftest(verbose: bool = True) -> bool:
+    import jax
+    import numpy as np
+
+    from repro.chip.compile import (compile_chip, compile_count,
+                                    reprogram_chip)
+    from repro.core.crossbar_layer import MLPSpec, mlp_init
+    from repro.deploy import AppSpec, deploy
+    from repro.fleet.ha import HeartbeatBoard
+    from repro.variability import NoiseModel, RecalPolicy
+
+    ok = True
+
+    def check(name, cond, detail=""):
+        nonlocal ok
+        ok = ok and bool(cond)
+        if verbose:
+            print(f"  [{'ok' if cond else 'FAIL'}] {name}"
+                  f"{'  (' + detail + ')' if detail else ''}")
+
+    spec = MLPSpec((64, 48, 10), activation="threshold",
+                   out_activation="linear")
+    params = mlp_init(jax.random.PRNGKey(0), spec)
+    x = np.asarray(jax.random.uniform(jax.random.PRNGKey(1), (64, 64)),
+                   np.float32)
+
+    # ---- σ=0 is bit-identical to the ideal path ------------------ #
+    ideal = np.asarray(compile_chip(spec, params=params).stream(x))
+    sigma0 = np.asarray(
+        compile_chip(spec, params=params, noise=NoiseModel()).stream(x))
+    check("sigma=0 NoiseModel bit-identical (memristor)",
+          np.array_equal(ideal, sigma0))
+    dig = np.asarray(compile_chip(spec, params=params,
+                                  system="digital").stream(x))
+    dig0 = np.asarray(compile_chip(spec, params=params, system="digital",
+                                   noise=NoiseModel()).stream(x))
+    check("sigma=0 NoiseModel bit-identical (digital)",
+          np.array_equal(dig, dig0))
+
+    # ---- programming-time effects perturb ------------------------ #
+    noisy = np.asarray(compile_chip(
+        spec, params=params,
+        noise=NoiseModel(program_sigma=0.3)).stream(x))
+    check("write noise perturbs the stream",
+          not np.array_equal(noisy, ideal) and np.isfinite(noisy).all())
+    stuck = np.asarray(compile_chip(
+        spec, params=params,
+        noise=NoiseModel(stuck_on_frac=0.05,
+                         stuck_off_frac=0.05)).stream(x))
+    check("stuck cells perturb the stream",
+          not np.array_equal(stuck, ideal) and np.isfinite(stuck).all())
+
+    # ---- drift ages the chip; reprogram resets it ---------------- #
+    chip = compile_chip(spec, params=params,
+                        noise=NoiseModel(drift_rate=2e-3))
+    fresh = np.asarray(chip.stream(x, advance_age=False))
+    check("drifting chip at age 0 matches ideal",
+          np.array_equal(fresh, ideal))
+    for _ in range(10):
+        chip.stream(x)
+    aged = np.asarray(chip.stream(x, advance_age=False))
+    check("drift moves the streamed output with age",
+          chip.items_streamed == 640 and not np.array_equal(aged, fresh),
+          f"age {chip.items_streamed}")
+    c0 = compile_count()
+    chip = reprogram_chip(chip, params)
+    restored = np.asarray(chip.stream(x, advance_age=False))
+    check("reprogram resets age and restores the output exactly",
+          chip.items_streamed == 0 and np.array_equal(restored, fresh))
+    check("reprogram ran zero compile passes",
+          compile_count() - c0 == 0)
+
+    # ---- the closed loop over a live deployment ------------------ #
+    canary = np.asarray(
+        jax.random.uniform(jax.random.PRNGKey(2), (128, 64)), np.float32)
+    with tempfile.TemporaryDirectory() as tmp, \
+            deploy(AppSpec("app", spec, params=params,
+                           noise=NoiseModel(drift_rate=5e-3)),
+                   n_chips=1) as dep:
+        board = HeartbeatBoard(tmp)
+        monitor = dep.attach_monitor("app", canary, every_steps=4)
+        recal = dep.attach_recalibration(
+            "app", policy=RecalPolicy(slo=0.99, cooldown_steps=8),
+            board=board)
+        c0 = compile_count()
+        rng = np.random.default_rng(0)
+        for _ in range(30):
+            dep.submit("app", rng.random((64, 64), dtype=np.float32))
+        dep.run_until_drained()
+        accs = [s.accuracy for s in monitor.samples]
+        check("canary accuracy dips below the SLO under drift",
+              min(accs) < 0.99, f"min {min(accs):.3f}")
+        check("closed loop recalibrates", len(recal.events) > 0,
+              f"{len(recal.events)} event(s)")
+        check("serving + recalibration ran zero compile passes",
+              compile_count() - c0 == 0)
+        # "restores" = the probe the recalibrator re-scores right
+        # after each reprogram (the last periodic probe can land
+        # mid-breach, inside the cooldown window — that is the drift
+        # tax the policy's cooldown knob accepts, not a failure)
+        restored_accs = [e.accuracy_after for e in recal.events]
+        check("recalibration restores canary accuracy",
+              restored_accs and min(restored_accs) >= 0.99,
+              f"min restored {min(restored_accs):.3f}")
+        check("events journaled on the HA board",
+              len(board.events("recalibration")) == len(recal.events))
+        stats = dep.stats()
+        check("stats carry the variability plane",
+              stats.variability is not None
+              and "app" in stats.variability
+              and stats.variability["app"]["monitor"]["probes"]
+              == len(monitor.samples))
+
+    if verbose:
+        print(f"selftest: {'PASS' if ok else 'FAIL'}")
+    return ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.variability")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run the non-ideal-device / recalibration "
+                         "smoke check")
+    args = ap.parse_args(argv)
+    if not args.selftest:
+        ap.print_help()
+        return 2
+    return 0 if selftest() else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

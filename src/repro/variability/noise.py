@@ -1,0 +1,163 @@
+"""Non-ideal memristor devices: the noise model (ROADMAP open item 5).
+
+The simulator's device model (``repro.core.device``) is *ideal* at
+system level: programming lands exactly on the feedback-write target,
+conductances hold forever, and every cell responds. Real 1T1M arrays
+do none of that — deployments mitigate write variation, conductance
+drift and stuck cells with variation-aware training and periodic
+reprogramming (Hasan & Taha arXiv:1603.07400; Gnawali et al.
+arXiv:1904.02183). :class:`NoiseModel` is the one container for those
+effects, consumed at two well-defined points:
+
+  PROGRAM time (``repro.core.crossbar_layer.program_layer``)
+    * ``program_sigma`` — mean-one lognormal multiplier on every
+      programmed conductance (the write lands near, not on, target).
+      A fresh draw per programming *epoch*: reprogramming re-rolls it.
+    * ``stuck_on_frac`` / ``stuck_off_frac`` — Bernoulli fraction of
+      devices stuck at G_ON / G_OFF. A hardware defect: the SAME
+      cells stay stuck across reprogramming epochs (epoch-independent
+      key), which is what makes recalibration a partial, not total,
+      repair.
+    * ``ir_drop_r_seg`` — per-segment wire resistance (Ω) folded as
+      the standard wire-attenuation transform (IR drop along the
+      crossbar rails), like the compile-time ``r_seg`` knob.
+
+  STREAM time (``repro.chip.compile.stream_pipeline``)
+    * ``drift_rate`` — temporal conductance relaxation toward G_OFF,
+      per streamed item. Differential pairs keep one device at the
+      floor, so each weight's magnitude decays as
+      ``exp(-rate_cell · age)`` where ``age`` counts items streamed
+      since the last programming event and ``rate_cell`` is a
+      per-cell rate drawn once per device:
+      ``drift_rate × U[1-drift_spread, 1+drift_spread]`` (clipped at
+      0). The heterogeneity matters: a uniform decay would be
+      invisible to threshold/argmax readouts; per-cell rates skew the
+      dot products the way real retention loss does. The program-time
+      fold ``scale`` is frozen at programming (the chip's downstream
+      dividers are physical state), which is exactly the accuracy
+      loss closed-loop recalibration repairs — reprogramming resets
+      ``age`` to zero.
+
+The ideal model (all effects zero — the default) is a structural
+no-op: every hook is gated on :attr:`is_ideal` / :attr:`has_drift`,
+so a σ=0 ``NoiseModel`` executes literally the same code path as no
+model at all and is bit-identical to it (pinned in the tier-1 suite).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# domain separators for the per-purpose PRNG streams (arbitrary,
+# fixed: the split between epoch-dependent and epoch-independent
+# effects is the physics — write noise re-rolls, defects persist)
+_FOLD_PROGRAM = 0x9E37
+_FOLD_STUCK = 0x5BD1
+_FOLD_DRIFT = 0x85EB
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseModel:
+    """Non-ideal device effects for the memristor fabric (see module
+    docstring). All-zero (the default) is exactly the ideal device.
+    Digital (SRAM) fabrics ignore the model entirely."""
+    program_sigma: float = 0.0      # lognormal σ on programmed g
+    drift_rate: float = 0.0         # mean relaxation rate per item
+    drift_spread: float = 1.0       # per-cell rate heterogeneity
+    stuck_on_frac: float = 0.0      # fraction of cells stuck at G_ON
+    stuck_off_frac: float = 0.0     # fraction stuck at G_OFF
+    ir_drop_r_seg: float = 0.0      # wire segment resistance (Ω)
+    seed: int = 0
+
+    def __post_init__(self):
+        for name in ("program_sigma", "drift_rate", "ir_drop_r_seg"):
+            if getattr(self, name) < 0:
+                raise ValueError(f"NoiseModel: {name} must be >= 0")
+        if not 0.0 <= self.drift_spread <= 1.0:
+            raise ValueError("NoiseModel: drift_spread must be in "
+                             "[0, 1] (per-cell rates stay >= 0)")
+        for name in ("stuck_on_frac", "stuck_off_frac"):
+            if not 0.0 <= getattr(self, name) <= 1.0:
+                raise ValueError(f"NoiseModel: {name} must be in [0, 1]")
+        if self.stuck_on_frac + self.stuck_off_frac > 1.0:
+            raise ValueError("NoiseModel: stuck_on_frac + "
+                             "stuck_off_frac must be <= 1")
+
+    # ---------------- gates --------------------------------------- #
+    @property
+    def is_ideal(self) -> bool:
+        """True when every effect is off — the hooks then run the
+        exact unperturbed code path (bit-identical, not just close)."""
+        return (self.program_sigma == 0.0 and self.drift_rate == 0.0
+                and self.stuck_on_frac == 0.0
+                and self.stuck_off_frac == 0.0
+                and self.ir_drop_r_seg == 0.0)
+
+    @property
+    def has_drift(self) -> bool:
+        return self.drift_rate > 0.0
+
+    # ---------------- keys ---------------------------------------- #
+    def _layer_key(self, layer: int) -> jax.Array:
+        return jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                                  int(layer))
+
+    def _program_keys(self, layer: int,
+                      epoch: int) -> Tuple[jax.Array, jax.Array]:
+        """Fresh per programming event (write noise re-rolls)."""
+        k = jax.random.fold_in(
+            jax.random.fold_in(self._layer_key(layer), _FOLD_PROGRAM),
+            int(epoch))
+        kp, kn = jax.random.split(k)
+        return kp, kn
+
+    def _stuck_keys(self, layer: int) -> Tuple[jax.Array, jax.Array]:
+        """Epoch-INdependent: the same physical cells stay stuck."""
+        k = jax.random.fold_in(self._layer_key(layer), _FOLD_STUCK)
+        kp, kn = jax.random.split(k)
+        return kp, kn
+
+    # ---------------- program-time effects ------------------------ #
+    def _stick(self, key: jax.Array, g: jax.Array,
+               device) -> jax.Array:
+        u = jax.random.uniform(key, g.shape)
+        g = jnp.where(u < self.stuck_on_frac, device.g_on, g)
+        return jnp.where(
+            (u >= self.stuck_on_frac) &
+            (u < self.stuck_on_frac + self.stuck_off_frac),
+            device.g_off, g)
+
+    def perturb(self, gp: jax.Array, gn: jax.Array, device, *,
+                layer: int = 0,
+                epoch: int = 0) -> Tuple[jax.Array, jax.Array]:
+        """Apply the programming-time effects to an encoded tile grid:
+        mean-one lognormal write error (fresh per ``epoch``), then the
+        persistent stuck-cell overrides. Caller applies IR drop via
+        the wire-attenuation fold (``ir_drop_r_seg``)."""
+        if self.program_sigma > 0.0:
+            s = self.program_sigma
+            kp, kn = self._program_keys(layer, epoch)
+            gp = device.clip(gp * jnp.exp(
+                s * jax.random.normal(kp, gp.shape) - 0.5 * s * s))
+            gn = device.clip(gn * jnp.exp(
+                s * jax.random.normal(kn, gn.shape) - 0.5 * s * s))
+        if self.stuck_on_frac > 0.0 or self.stuck_off_frac > 0.0:
+            sp, sn = self._stuck_keys(layer)
+            gp = self._stick(sp, gp, device)
+            gn = self._stick(sn, gn, device)
+        return gp, gn
+
+    # ---------------- stream-time drift --------------------------- #
+    def drift_field(self, shape: Tuple[int, ...], *,
+                    layer: int = 0) -> jax.Array:
+        """Per-cell relaxation rates for one layer's tile grid
+        (epoch-independent — retention is a device property). The
+        streamed decay is then ``exp(-field · age)``."""
+        k = jax.random.fold_in(self._layer_key(layer), _FOLD_DRIFT)
+        u = jax.random.uniform(k, shape,
+                               minval=1.0 - self.drift_spread,
+                               maxval=1.0 + self.drift_spread)
+        return (self.drift_rate * u).astype(jnp.float32)

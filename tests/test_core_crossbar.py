@@ -8,9 +8,8 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import quantization as q
-from repro.core.crossbar import (column_gain, crossbar_forward,
-                                 effective_weights, eq3_dot_product,
-                                 pairs_from_weights, wire_attenuation)
+from repro.core.crossbar import (crossbar_forward, effective_weights,
+                                 eq3_dot_product, wire_attenuation)
 from repro.core.device import DEFAULT_DEVICE, DeviceModel
 
 

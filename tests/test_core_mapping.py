@@ -9,8 +9,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.configs.paper_apps import APPS, PAPER_TABLES
 from repro.core.mapping import (Mapping, map_networks, network_depth,
-                                nn_macs, pack, risc_cores_needed,
-                                split_network, split_networks)
+                                nn_macs, risc_cores_needed,
+                                split_network)
 from repro.core.neural_core import CoreGeometry
 
 

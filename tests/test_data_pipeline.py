@@ -1,6 +1,4 @@
 """Data pipeline: determinism, shardability, checkpoint/restore."""
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

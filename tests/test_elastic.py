@@ -8,8 +8,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
-
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -31,7 +31,6 @@ kills — the federated ``--chaos-selftest`` CLI, and the lockstep
 mid-collective; the survivor must catch :class:`MembershipChange`,
 ``degrade_to_local``, and finish both feeds).
 """
-import json
 import os
 import sys
 import textwrap

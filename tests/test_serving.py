@@ -1,7 +1,6 @@
 """Continuous-batching engine on a reduced dense config."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_reduced

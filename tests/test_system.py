@@ -3,7 +3,6 @@ app, program its crossbars, push data through the functional model, and
 check cost accounting consistency."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.paper_apps import APPS
 from repro.core.costmodel import app_costs

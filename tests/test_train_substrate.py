@@ -11,7 +11,7 @@ import pytest
 from repro.data.pipeline import TokenPipeline
 from repro.optim import qat
 from repro.optim.adamw import AdamW, constant_schedule
-from repro.optim.grad_compression import (compress_decompress, init_error,
+from repro.optim.grad_compression import (compress_decompress,
                                           quantize_leaf, dequantize_leaf)
 from repro.train import checkpoint as ckpt
 from repro.train.train_loop import (StragglerWatchdog, TrainLoopConfig,

@@ -1,0 +1,285 @@
+"""repro.variability: non-ideal devices, drift, and the closed loop.
+
+Pins the subsystem's two contracts:
+
+* an ideal (all-zero) NoiseModel is BIT-identical to no model at all
+  — memristor and digital, single chip and sharded fleet, QAT
+  trainer — rel 0.0, not "close";
+* with drift on, the accuracy-SLO loop restores canary accuracy via
+  live reprogramming with ``compile_count()`` pinned at zero delta,
+  and every event lands on the HA board journal.
+"""
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro.chip.compile import (compile_chip, compile_count,
+                                reprogram_chip)
+from repro.core.crossbar_layer import MLPSpec, mlp_init
+from repro.deploy import AppSpec, deploy
+from repro.fleet.ha import HeartbeatBoard
+from repro.fleet.shard import shard_chip
+from repro.variability import (AccuracyMonitor, NoiseModel, RecalPolicy)
+
+SPEC = MLPSpec((64, 48, 10), activation="threshold",
+               out_activation="linear")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return mlp_init(jax.random.PRNGKey(0), SPEC)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    return np.asarray(
+        jax.random.uniform(jax.random.PRNGKey(1), (48, 64)), np.float32)
+
+
+# ------------------------------------------------------------------ #
+# the σ=0 bit-identity contract
+# ------------------------------------------------------------------ #
+def test_sigma0_bit_identical_memristor(params, batch):
+    ideal = np.asarray(compile_chip(SPEC, params=params).stream(batch))
+    nm = np.asarray(compile_chip(SPEC, params=params,
+                                 noise=NoiseModel()).stream(batch))
+    assert np.array_equal(ideal, nm)          # rel 0.0, bitwise
+
+
+def test_sigma0_bit_identical_digital(params, batch):
+    ideal = np.asarray(compile_chip(SPEC, params=params,
+                                    system="digital").stream(batch))
+    nm = np.asarray(compile_chip(SPEC, params=params, system="digital",
+                                 noise=NoiseModel()).stream(batch))
+    assert np.array_equal(ideal, nm)
+
+
+def test_sigma0_bit_identical_sharded(params, batch):
+    chip = compile_chip(SPEC, params=params, noise=NoiseModel())
+    ideal = compile_chip(SPEC, params=params)
+    fleet = shard_chip(chip, 1)
+    assert np.array_equal(fleet.stream_host(batch),
+                          np.asarray(ideal.stream(batch)))
+
+
+def test_ideal_model_attaches_no_drift_state(params):
+    chip = compile_chip(SPEC, params=params, noise=NoiseModel())
+    assert not chip.has_drift
+    assert all(layer.drift is None for layer in chip.plan)
+    chip.stream(np.zeros((4, 64), np.float32))
+    assert chip.items_streamed == 0           # clock only runs w/ drift
+
+
+# ------------------------------------------------------------------ #
+# programming-time effects
+# ------------------------------------------------------------------ #
+def test_program_sigma_perturbs_and_rerolls_per_epoch(params, batch):
+    noise = NoiseModel(program_sigma=0.3)
+    ideal = np.asarray(compile_chip(SPEC, params=params).stream(batch))
+    chip = compile_chip(SPEC, params=params, noise=noise)
+    out0 = np.asarray(chip.stream(batch))
+    assert not np.array_equal(out0, ideal)
+    assert np.isfinite(out0).all()
+    # same epoch → same draw (deterministic), next epoch → fresh draw
+    again = np.asarray(
+        compile_chip(SPEC, params=params, noise=noise).stream(batch))
+    assert np.array_equal(again, out0)
+    re = reprogram_chip(chip, params)
+    out1 = np.asarray(re.stream(batch))
+    assert not np.array_equal(out1, out0)
+
+
+def test_stuck_cells_persist_across_reprogram(params, batch):
+    noise = NoiseModel(stuck_on_frac=0.05, stuck_off_frac=0.05)
+    chip = compile_chip(SPEC, params=params, noise=noise)
+    out0 = np.asarray(chip.stream(batch))
+    ideal = np.asarray(compile_chip(SPEC, params=params).stream(batch))
+    assert not np.array_equal(out0, ideal)
+    # stuck cells are hardware defects: a new programming epoch with
+    # the same weights lands on the SAME masks → identical output
+    re = reprogram_chip(chip, params)
+    assert np.array_equal(np.asarray(re.stream(batch)), out0)
+
+
+def test_ir_drop_attenuates(params, batch):
+    ideal = np.asarray(compile_chip(SPEC, params=params).stream(batch))
+    out = np.asarray(compile_chip(
+        SPEC, params=params,
+        noise=NoiseModel(ir_drop_r_seg=5.0)).stream(batch))
+    assert not np.array_equal(out, ideal)
+    assert np.isfinite(out).all()
+
+
+def test_noise_model_validation():
+    with pytest.raises(ValueError):
+        NoiseModel(program_sigma=-0.1)
+    with pytest.raises(ValueError):
+        NoiseModel(stuck_on_frac=0.7, stuck_off_frac=0.6)
+    with pytest.raises(ValueError):
+        NoiseModel(drift_spread=1.5)
+    assert NoiseModel().is_ideal
+    assert not NoiseModel(drift_rate=1e-3).is_ideal
+
+
+# ------------------------------------------------------------------ #
+# temporal drift + the reprogram epoch/age semantics
+# ------------------------------------------------------------------ #
+def test_drift_ages_stream_and_probe_does_not_age(params, batch):
+    chip = compile_chip(SPEC, params=params,
+                        noise=NoiseModel(drift_rate=2e-3))
+    fresh = np.asarray(chip.stream(batch, advance_age=False))
+    assert chip.items_streamed == 0
+    ideal = np.asarray(compile_chip(SPEC, params=params).stream(batch))
+    assert np.array_equal(fresh, ideal)       # age 0 == ideal, bitwise
+    for _ in range(10):
+        chip.stream(batch)
+    assert chip.items_streamed == 480
+    aged = np.asarray(chip.stream(batch, advance_age=False))
+    assert not np.array_equal(aged, fresh)
+
+
+def test_reprogram_resets_age_and_restores_exactly(params, batch):
+    chip = compile_chip(SPEC, params=params,
+                        noise=NoiseModel(drift_rate=2e-3))
+    fresh = np.asarray(chip.stream(batch, advance_age=False))
+    for _ in range(10):
+        chip.stream(batch)
+    c0 = compile_count()
+    re = reprogram_chip(chip, params)
+    assert compile_count() - c0 == 0
+    assert re.items_streamed == 0
+    # pure drift (no write noise): the re-flash restores the output
+    # bit-for-bit, not just approximately
+    assert np.array_equal(np.asarray(re.stream(batch,
+                                               advance_age=False)),
+                          fresh)
+
+
+def test_sharded_drift_matches_single_chip(params, batch):
+    noise = NoiseModel(drift_rate=2e-3)
+    single = compile_chip(SPEC, params=params, noise=noise)
+    fleet = shard_chip(compile_chip(SPEC, params=params, noise=noise), 1)
+    for _ in range(3):      # same batch sequence → same age trajectory
+        a = np.asarray(single.stream(batch))
+        b = fleet.stream_host(batch)
+        assert np.array_equal(a, b)
+    assert fleet.chip.items_streamed == single.items_streamed == 144
+
+
+# ------------------------------------------------------------------ #
+# monitor + closed loop
+# ------------------------------------------------------------------ #
+def test_monitor_series_and_closed_loop(params):
+    canary = np.asarray(
+        jax.random.uniform(jax.random.PRNGKey(2), (128, 64)), np.float32)
+    with tempfile.TemporaryDirectory() as tmp, \
+            deploy(AppSpec("app", SPEC, params=params,
+                           noise=NoiseModel(drift_rate=5e-3)),
+                   n_chips=1) as dep:
+        board = HeartbeatBoard(tmp)
+        monitor = dep.attach_monitor("app", canary, every_steps=2)
+        recal = dep.attach_recalibration(
+            "app", policy=RecalPolicy(slo=0.99, cooldown_steps=4),
+            board=board)
+        c0 = compile_count()
+        assert monitor.score().accuracy == 1.0    # attach-time baseline
+        rng = np.random.default_rng(0)
+        for _ in range(20):
+            dep.submit("app", rng.random((64, 64), dtype=np.float32))
+        dep.run_until_drained()
+
+        accs = [s.accuracy for s in monitor.samples]
+        assert min(accs) < 0.99               # drift breached the SLO
+        assert recal.events                   # and the loop reacted
+        assert compile_count() - c0 == 0      # with zero compiles
+        # the closed loop restores canary accuracy to within 1% of
+        # the clean (attach-time) baseline on every recalibration
+        assert min(e.accuracy_after for e in recal.events) >= 0.99
+        assert all(e.compile_delta == 0 for e in recal.events)
+        # age monotone within the series between recals; reset after
+        assert monitor.samples[-1].items_streamed < 20 * 64
+
+        # journaled like membership changes
+        events = board.events("recalibration")
+        assert len(events) == len(recal.events)
+        assert events[0]["kind"] == "recalibration"
+        assert events[0]["app"] == "app"
+
+        # surfaced through the stats/report plane
+        stats = dep.stats()
+        assert stats.variability is not None
+        entry = stats.variability["app"]
+        assert entry["monitor"]["probes"] == len(monitor.samples)
+        assert entry["recalibration"]["recals"] == len(recal.events)
+        assert entry["noise"]["drift_rate"] == pytest.approx(5e-3)
+        report = dep.variability_report()
+        assert report["app"]["monitor"]["series"]["accuracy"] == accs
+
+
+def test_monitor_standalone_probe_counts(params):
+    chip = compile_chip(SPEC, params=params,
+                        noise=NoiseModel(drift_rate=2e-3))
+    canary = np.asarray(
+        jax.random.uniform(jax.random.PRNGKey(3), (64, 64)), np.float32)
+    monitor = AccuracyMonitor(lambda: chip, canary, name="probe")
+    s0 = monitor.score()
+    assert s0.accuracy == 1.0 and s0.items_streamed == 0
+    assert chip.items_streamed == 0           # probes never age
+    chip.stream(canary)
+    s1 = monitor.score()
+    assert s1.items_streamed == 64
+    assert monitor.summary()["probes"] == 2
+
+
+def test_recal_requires_params_or_fn(params):
+    canary = np.zeros((8, 64), np.float32)
+    prog_params = params
+    from repro.core.crossbar_layer import program_mlp
+    prog = program_mlp(prog_params, SPEC, mode="crossbar")
+    with deploy(AppSpec("app", prog), n_chips=1) as dep:
+        monitor = dep.attach_monitor("app", canary)
+        recal = dep.attach_recalibration("app", monitor=monitor)
+        with pytest.raises(ValueError, match="no stored"):
+            recal.recalibrate()
+
+
+# ------------------------------------------------------------------ #
+# QAT trainer equivalence at σ=0 (satellite)
+# ------------------------------------------------------------------ #
+def test_qat_trainer_sigma0_equivalence():
+    from repro.optim.qat import train_mlp
+    x = np.asarray(jax.random.uniform(jax.random.PRNGKey(4), (96, 16)))
+    y = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(5), (96,), 0, 4))
+    kw = dict(activation="threshold", weight_bits=8, act_bits=8,
+              steps=25, seed=0)
+    clean = train_mlp(x, y, (16, 12, 4), **kw)
+    off = train_mlp(x, y, (16, 12, 4), noise=None, **kw)
+    sig0 = train_mlp(x, y, (16, 12, 4), noise=NoiseModel(), **kw)
+    for a, b in ((clean, off), (clean, sig0)):
+        for pa, pb in zip(a["params"], b["params"]):
+            # noise-off path == clean path, rel 0.0
+            assert np.array_equal(np.asarray(pa["w"]),
+                                  np.asarray(pb["w"]))
+            assert np.array_equal(np.asarray(pa["b"]),
+                                  np.asarray(pb["b"]))
+    hard = train_mlp(x, y, (16, 12, 4),
+                     noise=NoiseModel(program_sigma=0.3), **kw)
+    assert not np.array_equal(np.asarray(hard["params"][0]["w"]),
+                              np.asarray(clean["params"][0]["w"]))
+
+
+# ------------------------------------------------------------------ #
+# normalize_system actionable errors (satellite)
+# ------------------------------------------------------------------ #
+def test_normalize_system_unknown_alias_message_is_actionable():
+    from repro.core.systems import SYSTEM_ALIASES, normalize_system
+    with pytest.raises(ValueError) as ei:
+        normalize_system("risc", context="AppSpec 'edge'")
+    msg = str(ei.value)
+    assert "AppSpec 'edge'" in msg            # says WHERE it happened
+    assert "'risc'" in msg                    # echoes the bad input
+    for alias in SYSTEM_ALIASES:              # lists every valid alias
+        assert alias in msg
