@@ -725,6 +725,96 @@ def _variability_recal() -> dict:
             "restored": bool(restored)}
 
 
+_OBS_SCRIPT = textwrap.dedent("""
+    import json, time
+    import jax
+    import numpy as np
+    from repro import obs
+    from repro.core.crossbar_layer import MLPSpec, mlp_init
+    from repro.deploy import AppSpec, DeploymentSpec, deploy
+
+    DEEP = %r
+    N_REQ = 24
+    ROUNDS = 3
+
+    spec = MLPSpec(DEEP, activation="threshold",
+                   out_activation="linear")
+    d = deploy(DeploymentSpec(apps=(
+        AppSpec("deep", spec,
+                params=mlp_init(jax.random.PRNGKey(0), spec),
+                lanes_per_chip=2),)))
+    rng = np.random.default_rng(0)
+    reqs = [rng.uniform(0, 1, (24, DEEP[0])).astype(np.float32)
+            for _ in range(N_REQ)]
+    items = sum(r.shape[0] for r in reqs)
+
+    def round_(telemetry):
+        if telemetry:
+            obs.configure()
+        else:
+            obs.disable()
+        t0 = time.perf_counter()
+        for r in reqs:
+            d.submit("deep", r)
+        d.run_until_drained()
+        return items / (time.perf_counter() - t0)
+
+    round_(False)                       # warmup: jit compile
+    off, on = [], []
+    for _ in range(ROUNDS):             # interleaved, best-of
+        off.append(round_(False))
+        on.append(round_(True))
+    hs = obs.current().metrics.snapshot()["histograms"]
+    step_s = hs.get("engine.step_s", {}).get("sum", 0.0)
+    phases = {k.split("phase=")[1]: v["sum"] for k, v in hs.items()
+              if k.startswith("engine.phase_s|")}
+    obs.disable()
+    d.close()
+    print(json.dumps({
+        "items_per_s_off": max(off),
+        "items_per_s_on": max(on),
+        "overhead_ratio": max(on) / max(off),
+        "phase_breakdown_pct": {
+            name: round(100 * dur / step_s, 2)
+            for name, dur in sorted(phases.items())} if step_s else {},
+    }))
+""")
+
+
+def _obs_overhead() -> dict:
+    """Serving throughput with full telemetry (metrics registry + span
+    tracer + phase profiling) vs telemetry disabled, interleaved
+    rounds on the deep-app geometry. Gate: >= 0.9x — the switchboard
+    check must stay out of the hot path. Also records the measured
+    step-phase breakdown (the ROADMAP item 4 scatter/compute/gather
+    baseline)."""
+    print("\n== obs_overhead: telemetry-on vs telemetry-off serving "
+          "==")
+    script = _OBS_SCRIPT % (MLP_DIMS,)
+    try:
+        out = simdev.run_simulated(script, n_devices=2, timeout=900)
+    except (OSError, subprocess.TimeoutExpired) as e:
+        print(f"  obs_overhead subprocess failed: {e!r}")
+        return {"error": repr(e), "overhead_ratio": 0.0}
+    if out.returncode != 0:
+        print(f"  obs_overhead subprocess failed:\n{out.stderr[-2000:]}")
+        return {"error": out.stderr[-2000:], "overhead_ratio": 0.0}
+    try:
+        res = simdev.last_json_line(out.stdout)
+    except (IndexError, ValueError) as e:
+        print(f"  obs_overhead emitted no result: {e!r}")
+        return {"error": f"unparseable output: {out.stdout[-500:]!r}",
+                "overhead_ratio": 0.0}
+    print(f"  telemetry off: {res['items_per_s_off']:8.0f} items/s")
+    print(f"  telemetry on : {res['items_per_s_on']:8.0f} items/s "
+          f"({res['overhead_ratio']:.3f}x off; gate >= 0.9)")
+    if res.get("phase_breakdown_pct"):
+        split = ", ".join(f"{k} {v:.1f}%" for k, v in
+                          res["phase_breakdown_pct"].items())
+        print(f"  phase breakdown (of step wall-clock): {split}")
+    return res
+
+
 def run() -> dict:
     tiles = _structural_report()
     errs = _correctness()
@@ -733,6 +823,7 @@ def run() -> dict:
     degraded = _fleet_degraded()
     deploy = _deploy_serve()
     vr = _variability_recal()
+    obs_oh = _obs_overhead()
     max_err = max(errs.values())
     ok = max_err < 1e-5 and wc["speedup"] >= 5.0 and \
         wc["chip_stream"]["vs_oracle_rel"] <= 1e-5 and \
@@ -743,11 +834,13 @@ def run() -> dict:
         deploy.get("single_vs_legacy", 0.0) > 0.7 and \
         bool(deploy.get("stats_exact", False)) and \
         bool(vr.get("restored", False)) and \
-        vr.get("compile_delta", 1) == 0
+        vr.get("compile_delta", 1) == 0 and \
+        obs_oh.get("overhead_ratio", 0.0) >= 0.9
     return {"tiles": tiles, "kernel_err": max_err, "kernel_errs": errs,
             "wallclock": wc, "fleet_serve": fleet,
             "fleet_degraded": degraded,
             "deploy_serve": deploy, "variability_recal": vr,
+            "obs_overhead": obs_oh,
             "pass": bool(ok)}
 
 

@@ -14,6 +14,9 @@ export PYTHONPATH="${PYTHONPATH:+$PYTHONPATH:}$PWD/src"
 if command -v ruff >/dev/null 2>&1; then
     echo "== ruff check =="
     ruff check src tests benchmarks
+elif python -c "import ruff" >/dev/null 2>&1; then
+    echo "== ruff check (python -m) =="
+    python -m ruff check src tests benchmarks
 else
     echo "== ruff not installed; skipping lint =="
 fi
@@ -35,5 +38,8 @@ python -m repro.deploy --selftest
 
 echo "== repro.variability --selftest =="
 python -m repro.variability --selftest
+
+echo "== repro.obs --selftest =="
+python -m repro.obs --selftest
 
 echo "smoke: ALL PASS"

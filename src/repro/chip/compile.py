@@ -42,11 +42,14 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import time
 import warnings
 from typing import Any, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+
+from repro.obs.core import current as _obs_current
 
 from repro.core import routing as routing_lib
 from repro.core.crossbar_layer import (CrossbarParams, DigitalParams,
@@ -384,8 +387,28 @@ class CompiledChip:
         age = None
         if self.has_drift:
             age = jnp.asarray(float(self.items_streamed), jnp.float32)
-        out = _stream(self.plan, xf, use_kernel=use_kernel,
-                      replication=rep, age=age)
+        tel = _obs_current()
+        if not tel.active:
+            out = _stream(self.plan, xf, use_kernel=use_kernel,
+                          replication=rep, age=age)
+        else:
+            # program-vs-stream economics, measured: the stream span
+            # carries the chip's compile_count delta (pinned 0 — a
+            # stream must never re-run the program pass) next to the
+            # per-batch wall time the compile span prices against
+            t0 = time.perf_counter()
+            c0 = _COMPILE_COUNT
+            out = _stream(self.plan, xf, use_kernel=use_kernel,
+                          replication=rep, age=age)
+            jax.block_until_ready(out)
+            dur = time.perf_counter() - t0
+            tel.tracer.complete(
+                "chip.stream", t0, dur, tid=0, cat="chip",
+                args={"rows": int(xf.shape[0]), "system": self.system,
+                      "compile_delta": _COMPILE_COUNT - c0})
+            tel.metrics.counter("chip.items_streamed").inc(
+                int(xf.shape[0]))
+            tel.metrics.histogram("chip.stream_s").record(dur)
         if age is not None and advance_age:
             self.advance_age(xf.shape[0])
         return out.reshape(*lead, out.shape[-1]).astype(x.dtype)
@@ -556,6 +579,7 @@ def compile_chip(networks: NetworksLike, *,
     mode = system_mode(system)
     global _COMPILE_COUNT
     _COMPILE_COUNT += 1
+    _t_compile0 = time.perf_counter()
 
     prog: Optional[ProgrammedMLP] = None
     dims: Optional[Tuple[int, ...]] = None
@@ -604,11 +628,23 @@ def compile_chip(networks: NetworksLike, *,
     # encoding knobs recorded only when this compile ran the encoder —
     # for a caller-programmed MLP they describe nothing (reprogram_chip
     # then demands them explicitly instead of guessing)
-    return CompiledChip(system, mapping.geom, mapping, route,
+    chip = CompiledChip(system, mapping.geom, mapping, route,
                         items_per_second, tsv_bits_per_item, plan, dims,
                         dict(weight_bits=weight_bits, device=device,
                              r_seg=r_seg) if encoded_here else None,
                         noise)
+    tel = _obs_current()
+    if tel.active:
+        dur = time.perf_counter() - _t_compile0
+        tel.tracer.complete("chip.compile", _t_compile0, dur, tid=0,
+                            cat="chip",
+                            args={"system": system,
+                                  "dims": list(dims) if dims else None,
+                                  "streamable": plan is not None})
+        tel.metrics.counter("chip.compiles").inc()
+        tel.metrics.gauge("chip.compile_count").set(_COMPILE_COUNT)
+        tel.metrics.histogram("chip.compile_s").record(dur)
+    return chip
 
 
 def program_plan(prog: ProgrammedMLP, *,
@@ -728,6 +764,13 @@ def reprogram_chip(chip: CompiledChip, params, *,
     # fresh object → fresh __dict__: the drift clock starts at age 0;
     # remember the epoch so the NEXT reprogram re-rolls write noise
     new.__dict__["_noise_epoch"] = epoch
+    tel = _obs_current()
+    if tel.active:
+        tel.tracer.instant(
+            "chip.reprogram", cat="chip",
+            args={"system": chip.system, "epoch": epoch,
+                  "compile_count": _COMPILE_COUNT})
+        tel.metrics.counter("chip.reprograms").inc()
     return new
 
 

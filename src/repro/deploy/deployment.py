@@ -305,6 +305,33 @@ class Deployment:
             return self._with_variability(router.stats_global())
         return self._with_variability(router.stats())
 
+    # ---------------- observability (repro.obs) --------------------- #
+    def metrics(self) -> dict:
+        """The ``repro.obs`` registry snapshot behind this deployment
+        (counters/gauges/bounded-histograms; empty unless
+        ``repro.obs.configure()`` ran). Distributed, this merges every
+        rank's registry (collective while in lockstep)."""
+        if self._closed:
+            raise RuntimeError("deployment is closed")
+        from repro import obs
+
+        router = self.router
+        if router is not None and hasattr(router, "metrics_global"):
+            return router.metrics_global()
+        return obs.current().metrics.snapshot()
+
+    def trace(self, path: str) -> str:
+        """Write the process trace (Chrome trace-event JSON — load at
+        ui.perfetto.dev or chrome://tracing) and return ``path``.
+        Covers everything the tracer saw: step phases, per-request
+        spans, chip program/stream timing, HA and recalibration
+        instants."""
+        if self._closed:
+            raise RuntimeError("deployment is closed")
+        from repro import obs
+
+        return obs.current().tracer.write(path)
+
     def report(self) -> DeploymentReport:
         """Multi-app Tables II–VI composition (+ served stats when the
         router has run). On a distributed fleet this is a collective —

@@ -26,8 +26,7 @@ import numpy as np
 
 from repro.fleet.router import (LockstepDrainMixin, RouterStats,
                                 TimedStepMixin, gather_global_stats,
-                                latency_arrays, stats_from_states,
-                                stream_member)
+                                stats_from_states, stream_member)
 from repro.serving.engine import (ItemRequest, KeyedItemStreamScheduler,
                                   StreamSpec)
 
@@ -183,18 +182,28 @@ class MultiAppRouter(TimedStepMixin, KeyedItemStreamScheduler):
             for name, spec in self._streams.items()}
         self.resize_streams(streams)
 
+    # ---------------- observability -------------------------------- #
+    def _obs_tags(self):
+        return {"router": type(self).__name__,
+                "apps": ",".join(map(str, self.members)),
+                "lanes": self.slots}
+
     # ---------------- accounting ----------------------------------- #
     def _finished_for(self, app: str) -> list:
         return [st for st in self.finished if st.request.key == app]
 
     def stats_app(self, app: str) -> RouterStats:
-        """One tenant's row (lanes/occupancy against ITS budget)."""
+        """One tenant's row (lanes/occupancy against ITS budget);
+        latency percentiles ride the app's bounded reservoir (exact
+        for runs up to the reservoir size)."""
         return stats_from_states(self._finished_for(app),
                                  items=self.items_by_key[app],
                                  steps=self.steps,
                                  wall_s=self._wall_s(),
                                  lanes=self._streams[app].lanes,
-                                 rejected=self.rejected_by_key[app])
+                                 rejected=self.rejected_by_key[app],
+                                 lat_res=self._lat_by_key[app],
+                                 wait_res=self._wait_by_key[app])
 
     def stats(self) -> DeploymentStats:
         fleet = stats_from_states(self.finished,
@@ -202,7 +211,9 @@ class MultiAppRouter(TimedStepMixin, KeyedItemStreamScheduler):
                                   steps=self.steps,
                                   wall_s=self._wall_s(),
                                   lanes=self.slots,
-                                  rejected=self.rejected)
+                                  rejected=self.rejected,
+                                  lat_res=self._lat_all,
+                                  wait_res=self._wait_all)
         return DeploymentStats(
             apps={name: self.stats_app(name) for name in self.members},
             fleet=fleet)
@@ -265,15 +276,38 @@ class DistributedMultiAppRouter(LockstepDrainMixin, MultiAppRouter):
         apps = {}
         for name in self.members:
             fin = self._finished_for(name)
-            lat, wait = latency_arrays(fin)
             apps[name] = gather_global_stats(
-                lat, wait, requests=len(fin),
+                self._lat_by_key[name].values,
+                self._wait_by_key[name].values, requests=len(fin),
                 items=self.items_by_key[name], steps=self.steps,
                 rejected=self.rejected_by_key[name],
                 lanes=self._streams[name].lanes, wall_s=wall)
-        lat, wait = latency_arrays(self.finished)
         fleet = gather_global_stats(
-            lat, wait, requests=len(self.finished),
+            self._lat_all.values, self._wait_all.values,
+            requests=len(self.finished),
             items=self.items_emitted, steps=self.steps,
             rejected=self.rejected, lanes=self.slots, wall_s=wall)
         return DeploymentStats(apps=apps, fleet=fleet)
+
+    def _obs_tags(self):
+        import jax
+
+        tags = MultiAppRouter._obs_tags(self)
+        tags["host"] = jax.process_index()
+        return tags
+
+    def metrics_global(self) -> dict:
+        """Fleet-wide merge of every rank's ``repro.obs`` registry
+        snapshot (collective while in lockstep; degraded mode falls
+        back to the local snapshot) — what
+        :meth:`repro.deploy.Deployment.metrics` serves on a
+        distributed deployment."""
+        import jax
+
+        from repro.obs import current, merge_snapshots
+        from repro.obs.dist import allgather_snapshots
+
+        snap = current().metrics.snapshot()
+        if not self._spmd_lockstep or jax.process_count() == 1:
+            return snap
+        return merge_snapshots(allgather_snapshots(snap))

@@ -52,6 +52,7 @@ import numpy as np
 from repro.fleet.router import (RouterStats, assemble_stats,
                                 latency_arrays)
 from repro.launch.simdev import board_path, read_board
+from repro.obs.core import current as _obs_current
 from repro.serving.engine import ItemRequest, ItemRequestState
 
 
@@ -501,8 +502,8 @@ class HAFleetServer:
         needs. Atomic on the board."""
         self._beat_n += 1
         r = self.router
-        lat, wait = latency_arrays(r.finished)
-        self.board.publish(self.rank, {
+        lat, wait = self._bounded_latencies()
+        payload = {
             "rank": self.rank,
             "beat": self._beat_n,
             "step": r.steps,
@@ -516,7 +517,23 @@ class HAFleetServer:
             "rejected_uids": list(self.rejected_uids),
             "absorbed": list(self.absorbed),
             "source": source_snapshot(self.source),
-        })
+        }
+        tel = _obs_current()
+        if tel.metrics.enabled:
+            # ride the heartbeat: a surviving rank can assemble the
+            # fleet-wide registry view from the board alone (bounded —
+            # histogram reservoirs cap the payload)
+            payload["metrics"] = tel.metrics.snapshot()
+        self.board.publish(self.rank, payload)
+
+    def _bounded_latencies(self):
+        """The router's bounded latency reservoirs when it keeps them
+        (every repro router does); raw extraction only for toy
+        routers in the property tests."""
+        arrays = getattr(self.router, "_latency_arrays", None)
+        if arrays is not None:
+            return arrays()
+        return latency_arrays(self.router.finished)
 
     # ---------------- failure handling ------------------------------ #
     def _journaled_or_held_uids(self) -> Set[int]:
@@ -541,6 +558,16 @@ class HAFleetServer:
         return uids
 
     def _on_failure(self, newly: Set[int]) -> None:
+        tel = _obs_current()
+        if newly and tel.active:
+            # the membership change lands on the same timeline as the
+            # engine steps that felt it
+            tel.tracer.instant(
+                "ha.membership_change", cat="ha",
+                args={"rank": self.rank, "dead": sorted(newly),
+                      "all_dead": sorted(self.detector.dead)})
+            tel.metrics.counter("ha.membership_changes").inc(
+                len(newly))
         if newly and self._t_failure is None:
             self._t_failure = time.perf_counter()
             self._items_at_failure = self.router.items_emitted
@@ -556,6 +583,14 @@ class HAFleetServer:
                     alive[dead_rank % len(alive)] != self.rank:
                 continue
             self.absorbed.append(dead_rank)
+            if tel.active:
+                tel.tracer.instant(
+                    "ha.takeover", cat="ha",
+                    args={"rank": self.rank, "dead_rank": dead_rank,
+                          "mode": "replay" if self.pipeline is not None
+                          and self.config.takeover != "reject"
+                          else "reject"})
+                tel.metrics.counter("ha.takeovers").inc()
             payload = self.board.read(dead_rank) or {}
             snap = payload.get("source")
             if snap is None:
@@ -671,7 +706,7 @@ class HAFleetServer:
         precisely the work it provably delivered). Exact when peers
         are done; a live peer's row is as fresh as its last beat."""
         r = self.router
-        lat, wait = latency_arrays(r.finished)
+        lat, wait = self._bounded_latencies()
         rows = [[len(r.finished), r.items_emitted, r.steps,
                  r.rejected, r.slots]]
         walls = [r._wall_s()]
@@ -691,3 +726,21 @@ class HAFleetServer:
                               np.asarray(walls),
                               np.concatenate(lats) if lats else [],
                               np.concatenate(waits) if waits else [])
+
+    def metrics_global(self) -> dict:
+        """Fleet-wide merge of the ``repro.obs`` registry snapshots on
+        the board (peers' last-published rows; for a dead peer, what
+        it provably recorded) plus this rank's live registry — the
+        no-collective twin of
+        :meth:`repro.fleet.DistributedFleetRouter.metrics_global`,
+        callable by any surviving rank."""
+        from repro.obs import current, merge_snapshots
+
+        snaps = [current().metrics.snapshot()]
+        for peer in self.board.ranks():
+            if peer == self.rank:
+                continue
+            payload = self.board.read(peer)
+            if payload and payload.get("metrics"):
+                snaps.append(payload["metrics"])
+        return merge_snapshots(snaps)

@@ -76,11 +76,37 @@ def latency_arrays(finished):
 
 
 def stats_from_states(finished, *, items: int, steps: int, wall_s: float,
-                      lanes: int, rejected: int) -> RouterStats:
+                      lanes: int, rejected: int,
+                      lat_res=None, wait_res=None) -> RouterStats:
     """Assemble one :class:`RouterStats` from finished request states
     plus the engine counters — the one formula behind the single-app
     router, the multi-app router's per-tenant rows and its fleet
-    roll-up (so per-app and fleet numbers can never drift apart)."""
+    roll-up (so per-app and fleet numbers can never drift apart).
+
+    ``lat_res``/``wait_res`` (``repro.obs.Reservoir``) are the bounded
+    accounting the keyed scheduler maintains per finish: means come
+    from the reservoir's exact count/sum, percentiles from its
+    retained samples — identical to the raw per-state lists for runs
+    up to the reservoir size, bounded-memory after. Without them the
+    historic extract-from-states path runs (exact, unbounded)."""
+    if lat_res is not None and wait_res is not None:
+        lat = lat_res.values
+        return RouterStats(
+            requests=len(finished),
+            items=items,
+            steps=steps,
+            wall_s=wall_s,
+            items_per_second=items / wall_s if wall_s else 0.0,
+            occupancy=items / max(steps * lanes, 1),
+            wait_s_mean=wait_res.mean,
+            latency_s_mean=lat_res.mean,
+            latency_s_p50=float(np.percentile(lat, 50))
+            if lat.size else 0.0,
+            latency_s_p95=float(np.percentile(lat, 95))
+            if lat.size else 0.0,
+            rejected=rejected,
+            lanes=lanes,
+        )
     lat, wait = latency_arrays(finished)
     return RouterStats(
         requests=len(finished),
@@ -248,7 +274,8 @@ class FleetRouter(TimedStepMixin, ItemStreamScheduler):
     def __init__(self, fleet, *, lanes_per_chip: int = 4,
                  use_kernel: bool = False,
                  queue_limit: Optional[int] = None,
-                 step_when_idle: bool = False):
+                 step_when_idle: bool = False,
+                 latency_reservoir: int = 4096):
         # a bare CompiledChip compiled without weights has plan=None
         # (ShardedChip already rejects those at shard time)
         if getattr(fleet, "plan", 1) is None:
@@ -267,7 +294,8 @@ class FleetRouter(TimedStepMixin, ItemStreamScheduler):
                          else fleet.dims[0],
                          slots=lanes_per_chip * self._lane_chips(fleet),
                          queue_limit=queue_limit,
-                         step_when_idle=step_when_idle)
+                         step_when_idle=step_when_idle,
+                         latency_reservoir=latency_reservoir)
         self.fleet = fleet
         self.n_chips = n_chips
         self.lanes_per_chip = lanes_per_chip
@@ -361,9 +389,19 @@ class FleetRouter(TimedStepMixin, ItemStreamScheduler):
             return "stop"               # source dry and nothing queued
         return "skip"
 
+    # ---------------- observability -------------------------------- #
+    def _obs_tags(self):
+        return {"router": type(self).__name__, "chips": self.n_chips,
+                "lanes": self.slots}
+
     # ---------------- accounting ----------------------------------- #
     def _latency_arrays(self):
-        return latency_arrays(self.finished)
+        """Bounded per-request (latency, wait) vectors — the
+        scheduler's finish-time reservoirs, NOT re-extracted from the
+        unbounded finished-state list (exact for runs up to the
+        reservoir size; what the cross-host gathers and the HA board
+        publish, so their wire/board size is bounded too)."""
+        return self._lat_all.values, self._wait_all.values
 
     def stats(self) -> RouterStats:
         return stats_from_states(self.finished,
@@ -371,7 +409,9 @@ class FleetRouter(TimedStepMixin, ItemStreamScheduler):
                                  steps=self.steps,
                                  wall_s=self._wall_s(),
                                  lanes=self.slots,
-                                 rejected=self.rejected)
+                                 rejected=self.rejected,
+                                 lat_res=self._lat_all,
+                                 wait_res=self._wait_all)
 
 
 class DistributedFleetRouter(LockstepDrainMixin, FleetRouter):
@@ -464,6 +504,28 @@ class DistributedFleetRouter(LockstepDrainMixin, FleetRouter):
             items=self.items_emitted, steps=self.steps,
             rejected=self.rejected, lanes=self.slots,
             wall_s=self._wall_s())
+
+    def _obs_tags(self):
+        import jax
+
+        tags = FleetRouter._obs_tags(self)
+        tags["host"] = jax.process_index()
+        return tags
+
+    def metrics_global(self) -> dict:
+        """Fleet-wide merge of every rank's ``repro.obs`` registry
+        snapshot (collective while in lockstep — every rank must call
+        together and every rank gets the same merged view; degraded
+        mode falls back to the local snapshot)."""
+        import jax
+
+        from repro.obs import current, merge_snapshots
+        from repro.obs.dist import allgather_snapshots
+
+        snap = current().metrics.snapshot()
+        if not self._spmd_lockstep or jax.process_count() == 1:
+            return snap
+        return merge_snapshots(allgather_snapshots(snap))
 
 
 # ------------------------------------------------------------------- #
@@ -567,6 +629,11 @@ def gather_global_stats(lat: np.ndarray, wait: np.ndarray, *,
     walls_all = np.asarray(multihost_utils.process_allgather(
         np.asarray([wall_s], np.float32)))
 
-    n_max = int(counts_all[:, 0].max())
+    # pad to the fleet-wide max VECTOR length, not the max request
+    # count: the vectors are bounded reservoirs (repro.obs), so the
+    # wire size stays bounded however long the serve ran
+    sizes_all = allgather_i64(np.asarray([lat.size, wait.size],
+                                         np.int64))
+    n_max = int(sizes_all.max())
     lat_all, wait_all = allgather_latencies(lat, wait, n_max)
     return assemble_stats(counts_all, walls_all, lat_all, wait_all)

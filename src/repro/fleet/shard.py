@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Dict, Optional
 
 import jax
@@ -46,6 +47,7 @@ from repro.chip.compile import (CompiledChip, reprogram_chip,
                                 warn_once_deprecated)
 from repro.compat import make_array_from_process_local_data, shard_map
 from repro.launch.mesh import make_fleet_mesh, mesh_spans_processes
+from repro.obs.core import current as _obs_current
 
 
 def replicate_to_mesh(tree, mesh: jax.sharding.Mesh):
@@ -220,6 +222,8 @@ class ShardedChip:
                 f"{len({d.process_index for d in self.mesh.devices.flat})} "
                 "processes. Use stream_local(x_local): every process "
                 "passes its own rows and reads back its own outputs.")
+        tel = _obs_current()
+        t0 = time.perf_counter() if tel.active else 0.0
         xf = np.asarray(x, np.float32)
         lead = xf.shape[:-1]
         xf = xf.reshape(-1, xf.shape[-1])
@@ -237,6 +241,11 @@ class ShardedChip:
             out = np.asarray(
                 self._fn(use_kernel, True)(self._plan, xs, age))[:B]
             self.chip.advance_age(B)
+        if tel.active:
+            tel.tracer.complete(
+                "fleet.stream_host", t0, time.perf_counter() - t0,
+                tid=0, cat="fleet",
+                args={"rows": int(B), "chips": self.n_chips})
         return out.reshape(*lead, out.shape[-1])
 
     def stream_local(self, x, *, use_kernel: bool = False) -> np.ndarray:
@@ -257,6 +266,8 @@ class ShardedChip:
         process owns all rows), which keeps the tier-1 suite able to
         pin its semantics without spawning a cluster.
         """
+        tel = _obs_current()
+        t0 = time.perf_counter() if tel.active else 0.0
         xf = np.asarray(x, np.float32)
         lead = xf.shape[:-1]
         xf = xf.reshape(-1, xf.shape[-1])
@@ -280,6 +291,11 @@ class ShardedChip:
         shards = sorted(out.addressable_shards,
                         key=lambda s: s.index[0].start or 0)
         y = np.concatenate([np.asarray(s.data) for s in shards])[:B]
+        if tel.active:
+            tel.tracer.complete(
+                "fleet.stream_local", t0, time.perf_counter() - t0,
+                tid=0, cat="fleet",
+                args={"rows": int(B), "local_chips": n_local})
         return y.reshape(*lead, y.shape[-1])
 
     def stream(self, x: jax.Array, *,

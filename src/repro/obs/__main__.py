@@ -1,0 +1,220 @@
+"""CI smoke entry point for the telemetry layer.
+
+``PYTHONPATH=src python -m repro.obs --selftest`` — single process,
+simulated host devices (default 2; the flag is pinned into XLA_FLAGS
+before jax initializes, which is why :mod:`repro.obs` never imports
+jax at module scope). Serves a two-tenant deployment with telemetry
+configured and checks:
+
+  * registry counters equal the router's own accounting exactly
+    (items, steps, per-app finished/rejected);
+  * a rejected submit still carries ``t_submit`` and is counted per
+    key in the registry;
+  * ``RouterStats`` percentiles off the bounded reservoir are
+    IDENTICAL to percentiles of the raw finished-state latencies for
+    a run shorter than the reservoir;
+  * per-step phase durations (admit/dispatch/device_step/gather/
+    finish) sum to the measured step wall-clock within 10%, and the
+    measured dispatch/device/gather breakdown is printed — the
+    baseline ROADMAP item 4 must beat;
+  * ``Deployment.trace(path)`` writes a loadable Chrome trace: every
+    complete span carries pid/tid/ts/dur, phases nest inside their
+    step span, async begin/end events pair up.
+
+Exit 0 iff every check passes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+
+def selftest(verbose: bool = True) -> bool:
+    import jax
+    import numpy as np
+
+    from repro import obs
+    from repro.core.crossbar_layer import MLPSpec, mlp_init
+    from repro.deploy import AppSpec, DeploymentSpec, deploy
+
+    ok = True
+
+    def check(name, cond, detail=""):
+        nonlocal ok
+        ok = ok and bool(cond)
+        if verbose:
+            print(f"  [{'ok' if cond else 'FAIL'}] {name}"
+                  f"{'  (' + detail + ')' if detail else ''}")
+
+    n_dev = len(jax.devices())
+    check("simulated fleet devices", n_dev >= 2, f"{n_dev} devices")
+
+    tel = obs.configure()
+    check("telemetry configured", obs.current() is tel and tel.active)
+
+    # -- a two-tenant deployment under full telemetry --------------- #
+    dims_a, dims_b = (48, 32, 10), (24, 12, 4)
+    spec_a = MLPSpec(dims_a, activation="threshold",
+                     out_activation="linear")
+    spec_b = MLPSpec(dims_b, activation="threshold",
+                     out_activation="linear")
+    d = deploy(DeploymentSpec(apps=(
+        AppSpec("alpha", spec_a,
+                params=mlp_init(jax.random.PRNGKey(0), spec_a),
+                lanes_per_chip=2),
+        AppSpec("beta", spec_b,
+                params=mlp_init(jax.random.PRNGKey(1), spec_b),
+                lanes_per_chip=1, queue_limit=2),
+    )))
+    rng = np.random.default_rng(0)
+    accepted = 0
+    for i in range(6):
+        accepted += d.submit("alpha", rng.uniform(
+            0, 1, (3 + i % 4, dims_a[0])).astype(np.float32))
+    for i in range(5):
+        # beta's queue_limit=2 back-pressures some of these on purpose
+        accepted += d.submit("beta", rng.uniform(
+            0, 1, (2 + i % 3, dims_b[0])).astype(np.float32))
+    done = list(d.run_until_drained())
+    stats = d.stats()
+    check("two-tenant traffic drains", accepted >= 8 and
+          len(done) == accepted, f"{len(done)}/{accepted} finished")
+
+    # -- counters == router accounting ------------------------------ #
+    snap = d.metrics()
+    c = snap["counters"]
+    router = d.router
+    check("engine.items counter == router items_emitted",
+          c.get("engine.items") == router.items_emitted ==
+          stats.fleet.items,
+          f"{c.get('engine.items')} vs {router.items_emitted}")
+    check("engine.steps counter == router steps",
+          c.get("engine.steps") == router.steps)
+    per_app = all(
+        c.get(f"engine.requests_finished|key={app}")
+        == stats.apps[app].requests for app in ("alpha", "beta"))
+    check("per-app finished counters == per-app stats rows", per_app)
+
+    # -- rejected submits: stamped + counted per key ----------------- #
+    from repro.serving.engine import ItemRequest
+    backlog = []
+    rejected_req = None
+    while rejected_req is None and len(backlog) < 50:
+        req = ItemRequest(uid=10_000 + len(backlog),
+                          items=np.zeros((1, dims_b[0]), np.float32),
+                          key="beta")
+        if router.submit(req):
+            backlog.append(req)
+        else:
+            rejected_req = req
+    check("a rejected submit still carries t_submit",
+          rejected_req is not None and rejected_req.t_submit > 0.0)
+    check("rejects counted per key in the registry",
+          d.metrics()["counters"].get("engine.rejected|key=beta")
+          == router.rejected_by_key["beta"]
+          == router.rejected > 0)
+    d.run_until_drained()
+
+    # -- reservoir percentiles == raw-list percentiles --------------- #
+    lat_raw = np.asarray([st.latency_s for st in router.finished])
+    s = d.stats().fleet
+    check("reservoir p50/p95 identical to raw-list percentiles "
+          "(run < reservoir size)",
+          s.latency_s_p50 == float(np.percentile(lat_raw, 50)) and
+          s.latency_s_p95 == float(np.percentile(lat_raw, 95)),
+          f"p50 {s.latency_s_p50 * 1e3:.2f} ms")
+
+    # -- phase timings tile the step wall-clock ---------------------- #
+    events = tel.tracer.trace_events()
+    steps = [e for e in events if e.get("cat") == "step"]
+    phases = [e for e in events if e.get("cat") == "phase"]
+    check("step and phase spans recorded",
+          len(steps) == router.steps and len(phases) >= len(steps))
+    step_total = sum(e["dur"] for e in steps)
+    phase_total = sum(e["dur"] for e in phases)
+    ratio = phase_total / step_total if step_total else 0.0
+    check("phase durations sum to step wall-clock within 10%",
+          0.90 <= ratio <= 1.02, f"sum(phases)/sum(steps) = {ratio:.4f}")
+    by_phase = {}
+    for e in phases:
+        by_phase[e["name"]] = by_phase.get(e["name"], 0.0) + e["dur"]
+    if verbose and step_total:
+        split = ", ".join(
+            f"{name} {100 * dur / step_total:.1f}%"
+            for name, dur in sorted(by_phase.items(),
+                                    key=lambda kv: -kv[1]))
+        print(f"  measured phase breakdown: {split}")
+    check("device_step dominates the step (the host scatter/gather "
+          "is not the bottleneck)",
+          by_phase.get("device_step", 0.0) > 0.5 * step_total,
+          f"device_step {100 * by_phase.get('device_step', 0.0) / max(step_total, 1e-12):.1f}%")
+
+    # -- chip-level spans -------------------------------------------- #
+    chips = [e for e in events if e.get("cat") == "chip"]
+    check("chip compile spans recorded with zero stream-time "
+          "compile delta",
+          any(e["name"] == "chip.compile" for e in chips) and
+          all(e.get("args", {}).get("compile_delta", 0) == 0
+              for e in chips if e["name"] == "chip.stream"))
+
+    # -- trace file: loadable, schema-valid, nested ------------------ #
+    path = os.path.join(tempfile.mkdtemp(prefix="repro_obs_"),
+                        "trace.json")
+    d.trace(path)
+    with open(path) as f:
+        doc = json.load(f)
+    evs = doc.get("traceEvents", [])
+    complete = [e for e in evs if e.get("ph") == "X"]
+    schema_ok = bool(complete) and all(
+        isinstance(e.get("pid"), int) and isinstance(e.get("tid"), int)
+        and isinstance(e.get("ts"), (int, float))
+        and isinstance(e.get("dur"), (int, float)) and e.get("name")
+        for e in complete)
+    check("trace file loads; every complete span has pid/tid/ts/dur",
+          schema_ok, f"{len(complete)} spans -> {path}")
+    steps_f = [e for e in complete if e.get("cat") == "step"]
+    nested = all(
+        any(st["pid"] == p["pid"] and st["tid"] == p["tid"] and
+            st["ts"] - 1e-3 <= p["ts"] and
+            p["ts"] + p["dur"] <= st["ts"] + st["dur"] + 1e-3
+            for st in steps_f)
+        for p in complete if p.get("cat") == "phase")
+    check("phase spans nest within their step span", nested)
+    begins = sorted(e["id"] for e in evs if e.get("ph") == "b")
+    ends = sorted(e["id"] for e in evs if e.get("ph") == "e")
+    check("async request begin/end events pair up",
+          begins == ends and len(begins) == len(router.finished))
+
+    d.close()
+    obs.disable()
+    check("disable() returns the inert pair", not obs.current().active)
+
+    if verbose:
+        print(f"selftest: {'PASS' if ok else 'FAIL'}")
+    return ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.obs")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run the telemetry smoke check")
+    ap.add_argument("--devices", type=int, default=2,
+                    help="simulated host devices (default 2; ignored "
+                         "when jax is already initialized or XLA_FLAGS "
+                         "is set)")
+    args = ap.parse_args(argv)
+    if not args.selftest:
+        ap.print_help()
+        return 2
+    if "jax" not in sys.modules and "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_"
+                                   f"count={args.devices}")
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    return 0 if selftest() else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

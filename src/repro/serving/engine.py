@@ -34,6 +34,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as model_lib
+from repro.obs.core import NULL_RECORDER, StepRecorder
+from repro.obs.core import current as _obs_current
+from repro.obs.metrics import DEFAULT_RESERVOIR, Reservoir
 from repro.serving import kvcache
 
 
@@ -128,7 +131,14 @@ class SlotScheduler:
     # ---------------- one engine step ------------------------------ #
     def step(self) -> int:
         """Backfill free lanes from the queue, then advance every
-        active lane one item. Returns the number of items emitted."""
+        active lane one item. Returns the number of items emitted.
+
+        With process telemetry configured (:mod:`repro.obs`) the step
+        is bracketed as a traced span split into named phases; the
+        disabled path is one global read + bool check."""
+        tel = _obs_current()
+        if tel.active:
+            return self._step_traced(tel)
         self._admit()
         if not self.active and not self.step_when_idle:
             return 0
@@ -136,6 +146,42 @@ class SlotScheduler:
         self.steps += 1
         self.items_emitted += emitted
         return emitted
+
+    def _step_traced(self, tel) -> int:
+        """The instrumented step body: identical bookkeeping to
+        :meth:`step`, with the admit phase and the active-set phases
+        (see :meth:`_step_active_observed`) recorded so Σ phase
+        durations tiles the step span."""
+        rec = StepRecorder(tel, self._obs_tags())
+        t0 = time.perf_counter()
+        with rec.phase("admit"):
+            self._admit()
+        idle = not self.active and not self.step_when_idle
+        emitted = 0
+        if not idle:
+            emitted = self._step_active_observed(rec)
+            self.steps += 1
+            self.items_emitted += emitted
+            m = tel.metrics
+            m.counter("engine.steps").inc()
+            m.counter("engine.items").inc(emitted)
+            m.gauge("engine.active_lanes").set(len(self.active))
+            m.gauge("engine.queue_depth").set(len(self.queue))
+        rec.close(t0, emitted=emitted, step=self.steps, idle=idle)
+        return emitted
+
+    def _step_active_observed(self, rec) -> int:
+        """Hook for phase-split step tracing: the base scheduler has
+        no payload structure to split, so the whole active-set step is
+        one ``active`` phase (the keyed scheduler overrides this with
+        dispatch/device_step/gather/finish)."""
+        with rec.phase("active"):
+            return self._step_active()
+
+    def _obs_tags(self) -> Dict[str, Any]:
+        """Static-ish span tags; routers override to add
+        chip/lane/app/host identity."""
+        return {"engine": type(self).__name__, "lanes": self.slots}
 
     def run_until_drained(self, max_steps: int = 10_000) -> List:
         steps = 0
@@ -220,6 +266,12 @@ class StreamSpec:
     queue_limit: Optional[int] = None
 
 
+def _key_label(key) -> str:
+    """Render a stream key as a metrics label (None = the anonymous
+    single stream)."""
+    return "default" if key is None else str(key)
+
+
 class KeyedItemStreamScheduler(SlotScheduler):
     """Slot-scheduled streaming of item sequences through one batched
     stream function *per payload key* per engine step.
@@ -247,7 +299,8 @@ class KeyedItemStreamScheduler(SlotScheduler):
     identically.
     """
 
-    def __init__(self, streams, *, step_when_idle: bool = False):
+    def __init__(self, streams, *, step_when_idle: bool = False,
+                 latency_reservoir: int = DEFAULT_RESERVOIR):
         self._streams: Dict[Any, StreamSpec] = dict(streams)
         if not self._streams:
             raise ValueError("KeyedItemStreamScheduler needs at least "
@@ -263,6 +316,15 @@ class KeyedItemStreamScheduler(SlotScheduler):
         self._queued: Dict[Any, int] = {}
         self.items_by_key: Dict[Any, int] = {}
         self.rejected_by_key: Dict[Any, int] = {}
+        # bounded per-request latency/wait accounting: exact for runs
+        # up to the reservoir size, uniform subsample after — what
+        # RouterStats percentiles and the cross-host latency gathers
+        # read, so a long serve cannot grow their memory or wire size
+        self.latency_reservoir = int(latency_reservoir)
+        self._lat_all = Reservoir(self.latency_reservoir)
+        self._wait_all = Reservoir(self.latency_reservoir)
+        self._lat_by_key: Dict[Any, Reservoir] = {}
+        self._wait_by_key: Dict[Any, Reservoir] = {}
         base = 0
         for key, spec in self._streams.items():
             self._base[key] = base
@@ -273,6 +335,8 @@ class KeyedItemStreamScheduler(SlotScheduler):
             self._queued[key] = 0
             self.items_by_key[key] = 0
             self.rejected_by_key[key] = 0
+            self._lat_by_key[key] = Reservoir(self.latency_reservoir)
+            self._wait_by_key[key] = Reservoir(self.latency_reservoir)
             base += spec.lanes
 
     # ---------------- payload hook --------------------------------- #
@@ -296,7 +360,13 @@ class KeyedItemStreamScheduler(SlotScheduler):
     # ---------------- keyed admission ------------------------------ #
     def submit(self, request: ItemRequest) -> bool:
         """Enqueue a request on its key's stream; False = that stream's
-        admission queue is full (per-tenant backpressure)."""
+        admission queue is full (per-tenant backpressure).
+
+        ``t_submit`` is stamped BEFORE the admission check — a
+        rejected request carries its arrival time, so rejection rates
+        can be time-bucketed, and a later re-submit keeps the ORIGINAL
+        stamp (latency is measured from first arrival, not from the
+        retry that finally got in)."""
         if not request.t_submit:
             request.t_submit = time.perf_counter()
         key = self._request_key(request)
@@ -310,6 +380,10 @@ class KeyedItemStreamScheduler(SlotScheduler):
                 self._queued[key] >= spec.queue_limit:
             self.rejected += 1
             self.rejected_by_key[key] += 1
+            tel = _obs_current()
+            if tel.active:
+                tel.metrics.counter("engine.rejected",
+                                    key=_key_label(key)).inc()
             return False
         self.queue.append(request)
         self._queued[key] += 1
@@ -385,6 +459,22 @@ class KeyedItemStreamScheduler(SlotScheduler):
     def _on_finish(self, st: ItemRequestState) -> None:
         st.t_done = time.perf_counter()
         st.done_step = self.steps
+        key = self._request_key(st.request)
+        self._lat_all.add(st.latency_s)
+        self._wait_all.add(st.wait_s)
+        res = self._lat_by_key.get(key)
+        if res is not None:
+            res.add(st.latency_s)
+            self._wait_by_key[key].add(st.wait_s)
+        tel = _obs_current()
+        if tel.active:
+            label = _key_label(key)
+            m = tel.metrics
+            m.counter("engine.requests_finished", key=label).inc()
+            m.histogram("request.latency_s", key=label).record(
+                st.latency_s)
+            m.histogram("request.wait_s", key=label).record(st.wait_s)
+            tel.tracer.request_span(st, key)
 
     # ---------------- eviction / re-admission / live resize --------- #
     def evict_active(self) -> List[ItemRequestState]:
@@ -458,33 +548,54 @@ class KeyedItemStreamScheduler(SlotScheduler):
 
     # ---------------- one keyed engine step ------------------------ #
     def _step_active(self) -> int:
-        by_key: Dict[Any, list] = {}
-        for slot, st in self.active.items():
-            by_key.setdefault(self._slot_key[slot], []).append((slot, st))
-        # idle keys still dispatch under step_when_idle (see class doc)
-        keys = list(self._streams) if self.step_when_idle else \
-            [k for k in self._streams if k in by_key]
+        return self._run_step_active(NULL_RECORDER)
+
+    def _step_active_observed(self, rec) -> int:
+        return self._run_step_active(rec)
+
+    def _run_step_active(self, rec) -> int:
+        """One keyed step, bracketed into the traced phases: dispatch
+        (scatter active lanes into per-key batches), device_step (one
+        batched payload call per key — the device-bound part), gather
+        (distribute outputs back to lane states), finish (retire
+        completed lanes). ``rec`` is the per-step recorder, or the
+        shared null recorder on the un-traced path."""
+        with rec.phase("dispatch"):
+            by_key: Dict[Any, list] = {}
+            for slot, st in self.active.items():
+                by_key.setdefault(self._slot_key[slot],
+                                  []).append((slot, st))
+            # idle keys still dispatch under step_when_idle (class doc)
+            keys = list(self._streams) if self.step_when_idle else \
+                [k for k in self._streams if k in by_key]
+            for key in keys:
+                batch = self._batches[key]
+                batch[:] = 0.0
+                base = self._base[key]
+                for slot, st in by_key.get(key, ()):
+                    batch[slot - base] = st.request.items[st.pos]
         outs = {}
         for key in keys:
-            batch = self._batches[key]
-            batch[:] = 0.0
-            base = self._base[key]
-            for slot, st in by_key.get(key, ()):
-                batch[slot - base] = st.request.items[st.pos]
-            outs[key] = np.asarray(self._stream_batch_key(key, batch))
+            with rec.phase("device_step", key=_key_label(key)):
+                outs[key] = np.asarray(
+                    self._stream_batch_key(key, self._batches[key]))
         now = time.perf_counter()
         emitted = 0
-        for key in keys:
-            out = outs[key]
-            base = self._base[key]
-            for slot, st in by_key.get(key, ()):
-                st.outputs.append(out[slot - base])
-                if st.pos == 0:
-                    st.t_first = now
-                st.pos += 1
-                emitted += 1
-                self.items_by_key[key] += 1
-                self._maybe_finish(st)
+        with rec.phase("gather"):
+            for key in keys:
+                out = outs[key]
+                base = self._base[key]
+                for slot, st in by_key.get(key, ()):
+                    st.outputs.append(out[slot - base])
+                    if st.pos == 0:
+                        st.t_first = now
+                    st.pos += 1
+                    emitted += 1
+                    self.items_by_key[key] += 1
+        with rec.phase("finish"):
+            for key in keys:
+                for slot, st in by_key.get(key, ()):
+                    self._maybe_finish(st)
         return emitted
 
 
@@ -499,9 +610,11 @@ class ItemStreamScheduler(KeyedItemStreamScheduler):
 
     def __init__(self, d_in: int, *, slots: int = 4,
                  queue_limit: Optional[int] = None,
-                 step_when_idle: bool = False):
+                 step_when_idle: bool = False,
+                 latency_reservoir: int = DEFAULT_RESERVOIR):
         super().__init__({None: StreamSpec(d_in, slots, queue_limit)},
-                         step_when_idle=step_when_idle)
+                         step_when_idle=step_when_idle,
+                         latency_reservoir=latency_reservoir)
         self.d_in = d_in
         self.queue_limit = queue_limit
         self._batch = self._batches[None]

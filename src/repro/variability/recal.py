@@ -133,6 +133,16 @@ class Recalibrator:
             self.board.publish_event(
                 "recalibration",
                 dict(rank=self.rank, **dataclasses.asdict(event)))
+        from repro.obs import current
+        tel = current()
+        if tel.active:
+            # the recalibration shows up on the serving timeline, next
+            # to the engine steps and any HA membership changes
+            tel.tracer.instant("variability.recalibration",
+                               cat="variability",
+                               args=dataclasses.asdict(event))
+            tel.metrics.counter("variability.recals",
+                                app=self.app).inc()
         return event
 
     def on_step(self, router) -> None:
