@@ -30,5 +30,5 @@ def run() -> dict:
         out[system] = best
         pub = "128x64" if system == "memristor" else "256x128"
         print(f"selected optimum: {best}  (paper: {pub})")
-    ok = out["memristor"] == "128x64"
+    ok = out["memristor"] == "128x64" and out["digital"] == "256x128"
     return {"best": out, "pass": ok}

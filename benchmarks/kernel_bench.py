@@ -815,6 +815,100 @@ def _obs_overhead() -> dict:
     return res
 
 
+_AUTOTUNE_SCRIPT = textwrap.dedent("""
+    import json, time
+    import jax
+    import numpy as np
+    from repro.deploy import AppSpec, DeploymentSpec, deploy
+    from repro.tune import tune
+
+    SLO = 1e5
+    spec = DeploymentSpec(apps=(
+        AppSpec("deep", "deep", items_per_second=SLO),
+        AppSpec("ocr", "ocr", items_per_second=SLO, weight_bits=12),
+    ))
+    t0 = time.perf_counter()
+    tuned = tune(spec)
+    tune_s = time.perf_counter() - t0
+
+    homog = [f for f in tuned.frontier
+             if f.feasible and f.homogeneous]
+    cheapest_homog_mw = min((f.power_mw for f in homog),
+                            default=float("inf"))
+    hetero = set(tuned.chip_systems) == {"memristor", "digital"}
+
+    d = deploy(tuned.spec)
+    rep = d.report()
+    slo_met = all(rep.apps[a].capacity_items_per_second >= SLO
+                  for a in ("deep", "ocr"))
+    rng = np.random.default_rng(0)
+    dims = {"deep": 784, "ocr": 2500}
+    for i in range(4):
+        for a, din in dims.items():
+            d.submit(a, rng.uniform(0, 1, (8, din)).astype(np.float32))
+    t0 = time.perf_counter()
+    d.run_until_drained()
+    serve_s = time.perf_counter() - t0
+    s = d.stats()
+    exact = (sum(x.items for x in s.apps.values()) == s.fleet.items
+             and sum(x.requests for x in s.apps.values()) ==
+             s.fleet.requests == 8)
+    print(json.dumps({
+        "devices": len(jax.devices()),
+        "tune_seconds": tune_s,
+        "combos_searched": len(tuned.frontier),
+        "chip_systems": list(tuned.chip_systems),
+        "hetero": bool(hetero),
+        "tuned_power_mw": tuned.power_mw,
+        "tuned_area_mm2": tuned.area_mm2,
+        "cheapest_homog_power_mw": cheapest_homog_mw,
+        "hetero_cheapest": bool(
+            hetero and tuned.power_mw <= cheapest_homog_mw),
+        "slo_met": bool(slo_met),
+        "items_per_s_served": s.fleet.items / max(serve_s, 1e-9),
+        "stats_exact": bool(exact),
+    }))
+""")
+
+
+def _autotune() -> dict:
+    """repro.tune end to end: the deep+ocr duo (ocr at 12-bit weights,
+    which no analog geometry can hold) autotuned into a heterogeneous
+    memristor+digital fabric, deployed on 2 simulated chips and
+    served. Gates: the tuned fabric is heterogeneous, meets both
+    declared SLOs, and costs no more than the cheapest homogeneous
+    fabric that does."""
+    print("\n== autotune: SLO/budget-driven fabric search, "
+          "heterogeneous duo ==")
+    try:
+        out = simdev.run_simulated(_AUTOTUNE_SCRIPT, n_devices=2,
+                                   timeout=900)
+    except (OSError, subprocess.TimeoutExpired) as e:
+        print(f"  autotune subprocess failed: {e!r}")
+        return {"error": repr(e), "hetero_cheapest": False}
+    if out.returncode != 0:
+        print(f"  autotune subprocess failed:\n{out.stderr[-2000:]}")
+        return {"error": out.stderr[-2000:], "hetero_cheapest": False}
+    try:
+        res = simdev.last_json_line(out.stdout)
+    except (IndexError, ValueError) as e:
+        print(f"  autotune emitted no result: {e!r}")
+        return {"error": f"unparseable output: {out.stdout[-500:]!r}",
+                "hetero_cheapest": False}
+    print(f"  search: {res['combos_searched']} assignments in "
+          f"{res['tune_seconds']:.2f}s -> "
+          f"{'+'.join(res['chip_systems'])}")
+    print(f"  tuned fabric : {res['tuned_power_mw']:8.2f} mW, "
+          f"{res['tuned_area_mm2']:.3f} mm2 "
+          f"(cheapest homogeneous meeting SLOs: "
+          f"{res['cheapest_homog_power_mw']:.2f} mW)")
+    print(f"  gates: hetero_cheapest={res['hetero_cheapest']} "
+          f"slo_met={res['slo_met']} "
+          f"stats_exact={res['stats_exact']} "
+          f"({res['items_per_s_served']:.0f} items/s served)")
+    return res
+
+
 def run() -> dict:
     tiles = _structural_report()
     errs = _correctness()
@@ -824,6 +918,7 @@ def run() -> dict:
     deploy = _deploy_serve()
     vr = _variability_recal()
     obs_oh = _obs_overhead()
+    autotune = _autotune()
     max_err = max(errs.values())
     ok = max_err < 1e-5 and wc["speedup"] >= 5.0 and \
         wc["chip_stream"]["vs_oracle_rel"] <= 1e-5 and \
@@ -835,12 +930,15 @@ def run() -> dict:
         bool(deploy.get("stats_exact", False)) and \
         bool(vr.get("restored", False)) and \
         vr.get("compile_delta", 1) == 0 and \
-        obs_oh.get("overhead_ratio", 0.0) >= 0.9
+        obs_oh.get("overhead_ratio", 0.0) >= 0.9 and \
+        bool(autotune.get("hetero_cheapest", False)) and \
+        bool(autotune.get("slo_met", False)) and \
+        bool(autotune.get("stats_exact", False))
     return {"tiles": tiles, "kernel_err": max_err, "kernel_errs": errs,
             "wallclock": wc, "fleet_serve": fleet,
             "fleet_degraded": degraded,
             "deploy_serve": deploy, "variability_recal": vr,
-            "obs_overhead": obs_oh,
+            "obs_overhead": obs_oh, "autotune": autotune,
             "pass": bool(ok)}
 
 

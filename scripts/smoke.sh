@@ -36,6 +36,9 @@ python -m repro.fleet --chaos-selftest
 echo "== repro.deploy --selftest =="
 python -m repro.deploy --selftest
 
+echo "== repro.tune --selftest =="
+python -m repro.tune --selftest
+
 echo "== repro.variability --selftest =="
 python -m repro.variability --selftest
 

@@ -328,6 +328,12 @@ class CompiledChip:
     # drift state (items streamed since programming) lives in
     # __dict__ host-side, NOT in the pytree.
     noise: Optional[Any] = None
+    # did THIS compile validate items_per_second against the routed TDM
+    # schedule? ``repro.fleet.shard`` uses it to dedupe the fleet-level
+    # re-validation: a chip-feasible rate times a fleet is vacuously
+    # feasible, so re-checking the SAME rate would only duplicate the
+    # warning the compile already issued.
+    rate_validated: bool = False
 
     # ------------------------------------------------------------ #
     @property
@@ -447,16 +453,17 @@ def _chip_flatten(chip: CompiledChip):
         static = _ChipStatic((chip.system, chip.geom, chip.mapping,
                               chip.route, chip.items_per_second,
                               chip.tsv_bits_per_item, chip.dims,
-                              chip.program_kw, chip.noise))
+                              chip.program_kw, chip.noise,
+                              chip.rate_validated))
         chip.__dict__["_static"] = static
     return (chip.plan,), static
 
 
 def _chip_unflatten(static: _ChipStatic, children) -> CompiledChip:
     (system, geom, mapping, route, rate, tsv, dims, pkw,
-     noise) = static.value
+     noise, rate_validated) = static.value
     chip = CompiledChip(system, geom, mapping, route, rate, tsv,
-                        children[0], dims, pkw, noise)
+                        children[0], dims, pkw, noise, rate_validated)
     chip.__dict__["_static"] = static
     return chip
 
@@ -486,7 +493,8 @@ def validate_stream_rate(items_per_second: float, replicas: int,
                                         "traffic), lower the target "
                                         "rate, or split the load across "
                                         "chips (repro.fleet)."),
-                         stacklevel: int = 3) -> None:
+                         stacklevel: int = 3,
+                         chip_replicas: Optional[int] = None) -> None:
     """items_per_second sizes the replica fan-out against COMPUTE
     capacity (§V.C), but each replica's mesh is also a static TDM
     network whose busiest link forwards LINK_BITS per cycle — a rate a
@@ -499,6 +507,11 @@ def validate_stream_rate(items_per_second: float, replicas: int,
     same compiled plan across a device mesh (the fleet-level
     re-validation — a chip-feasible rate times a fleet does not need
     checking, but a fleet-level target divided across the chips does).
+
+    ``chip_replicas`` (the per-chip replication, when ``replicas`` is
+    already the fleet total) folds BOTH capacity levels into the one
+    diagnostic, so a deployment that validates once — at the fleet
+    level — still tells the user what a single chip could have carried.
     """
     if not items_per_second:
         return
@@ -506,12 +519,17 @@ def validate_stream_rate(items_per_second: float, replicas: int,
     limit = route.max_items_per_second
     if per_replica <= limit * (1.0 + 1e-9):
         return
+    capacities = ""
+    if chip_replicas is not None:
+        capacities = (f" Capacity: {chip_replicas * limit:g} items/s "
+                      f"per chip, {replicas * limit:g} items/s "
+                      f"fleet-wide.")
     msg = (f"{context}: items_per_second={items_per_second:g} is "
            f"infeasible on the routed fabric: each of the "
            f"{replicas} {fabric} must stream "
            f"{per_replica:g} items/s, but the busiest mesh link's TDM "
            f"frame is {route.schedule_cycles} cycles/item, capping a "
-           f"replica at {limit:g} items/s. {remedy}")
+           f"replica at {limit:g} items/s.{capacities} {remedy}")
     if strict:
         raise ValueError(msg)
     warnings.warn(msg, ChipRateWarning, stacklevel=stacklevel)
@@ -546,7 +564,8 @@ def compile_chip(networks: NetworksLike, *,
                  sensor_flags: Optional[Sequence[bool]] = None,
                  deps: Optional[Sequence[Sequence[int]]] = None,
                  tsv_bits_per_item: Optional[float] = None,
-                 strict_rate: bool = False
+                 strict_rate: bool = False,
+                 validate_rate: bool = True
                  ) -> CompiledChip:
     """Compile networks onto a chip: split → pack → place → route, then
     program every mapped group's tile state.
@@ -566,6 +585,11 @@ def compile_chip(networks: NetworksLike, *,
     fan-out to the application's real-time rate (§V.C) and is validated
     against the routed TDM link capacity: an un-routable rate warns
     (:class:`ChipRateWarning`) or, with ``strict_rate=True``, raises.
+    ``validate_rate=False`` defers that check to a caller that will
+    validate the SAME rate at a wider scope (``repro.deploy`` validates
+    once at the fleet level, with both capacity numbers in the one
+    diagnostic) — the chip records whether it was validated
+    (``rate_validated``) so downstream re-checks can dedupe.
 
     ``noise`` (a ``repro.variability.NoiseModel``) compiles the chip
     onto NON-ideal devices: programming-time effects perturb the
@@ -620,7 +644,8 @@ def compile_chip(networks: NetworksLike, *,
                            items_per_second=items_per_second,
                            sensor_flags=sensor_flags, deps=deps)
     route = routing_lib.route(mapping)
-    _validate_rate(items_per_second, mapping, route, strict_rate)
+    if validate_rate:
+        _validate_rate(items_per_second, mapping, route, strict_rate)
 
     plan: Optional[Tuple[StreamLayer, ...]] = None
     if prog is not None:
@@ -632,7 +657,7 @@ def compile_chip(networks: NetworksLike, *,
                         items_per_second, tsv_bits_per_item, plan, dims,
                         dict(weight_bits=weight_bits, device=device,
                              r_seg=r_seg) if encoded_here else None,
-                        noise)
+                        noise, rate_validated=bool(validate_rate))
     tel = _obs_current()
     if tel.active:
         dur = time.perf_counter() - _t_compile0

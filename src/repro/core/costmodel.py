@@ -160,9 +160,13 @@ def all_tables() -> Dict[str, Dict[str, SystemCost]]:
 # --------------------------------------------------------------------- #
 # design-space exploration (Figs. 13–14)
 # --------------------------------------------------------------------- #
-def design_space(system: str, geometries=None) -> Dict[str, Dict]:
+def design_space(system: str, geometries=None, *,
+                 bits: int = 8) -> Dict[str, Dict]:
     """Sweep core geometry; per app report area & power normalized to the
-    best geometry for that app (the paper's Figs. 13/14 procedure)."""
+    best geometry for that app (the paper's Figs. 13/14 procedure).
+
+    ``bits`` sets the synaptic precision the analog feasibility bound is
+    evaluated at (paper default 8 — the Fig. 13 starred entries)."""
     system = normalize_system(system, context="design_space")
     if geometries is None:
         geometries = [CoreGeometry(r, r // 2)
@@ -178,8 +182,8 @@ def design_space(system: str, geometries=None) -> Dict[str, Dict]:
                 "area_mm2": c.area_mm2, "power_mw": c.power_mw,
                 "cores": c.cores,
                 # analog crossbars above the wire-IR precision bound
-                # cannot hold 8-bit synapses (§IV.A / Fig. 13)
-                "feasible": analog_precision_feasible(geom)
+                # cannot hold `bits`-bit synapses (§IV.A / Fig. 13)
+                "feasible": analog_precision_feasible(geom, bits=bits)
                 if system == "memristor" else True}
         a0 = min(r["area_mm2"] for r in rows.values())
         p0 = min(r["power_mw"] for r in rows.values())
@@ -190,16 +194,51 @@ def design_space(system: str, geometries=None) -> Dict[str, Dict]:
     return out
 
 
-def best_geometry(system: str, geometries=None) -> str:
-    """Geometry minimizing average normalized area+power over the apps
+def _geom_key(g: str):
+    rows, cols = g.split("x")
+    return (int(rows), int(cols))
+
+
+def best_geometry(system: str, geometries=None, *,
+                  bits: int = 8, apps=None) -> str:
+    """Geometry minimizing total normalized area+power over the apps
     among *feasible* geometries — the paper's selection rule (§V.B):
-    128×64 (1T1M, wire-IR-bounded), 256×128 (digital)."""
-    ds = design_space(system, geometries)
+    128×64 (1T1M, wire-IR-bounded), 256×128 (digital).
+
+    ``apps`` names the benchmarks that vote (default: the deep-NN
+    classifier apps — ``risc_algorithmic=False`` — the workloads the
+    §V.B fabric is sized FOR; the single-layer sensor-plane kernels
+    fit any geometry's slice and ride along, and letting them vote
+    drags the digital pick a bin below the paper's).
+
+    A geometry is feasible only if EVERY voting app can realize it
+    (the AND across apps, not the last app swept); infeasible
+    geometries are excluded from selection, not merely starred. Cost
+    ties break deterministically toward the smallest geometry (fewest
+    idle cells). Raises when no swept geometry is feasible — e.g. a
+    ``bits`` precision no analog crossbar size can hold.
+    """
+    ds = design_space(system, geometries, bits=bits)
+    if apps is None:
+        apps = [a for a, cfg in APPS.items()
+                if not cfg.risc_algorithmic]
+    unknown = sorted(set(apps) - set(ds))
+    if unknown:
+        raise ValueError(f"best_geometry: unknown app(s) {unknown} "
+                         f"(known: {sorted(ds)})")
     sums: Dict[str, float] = {}
     feasible: Dict[str, bool] = {}
-    for rows in ds.values():
+    for app_id in apps:
+        rows = ds[app_id]
         for g, r in rows.items():
             sums[g] = sums.get(g, 0.0) + r["norm_area"] + r["norm_power"]
-            feasible[g] = r["feasible"]
+            feasible[g] = feasible.get(g, True) and bool(r["feasible"])
     ok = {g: s for g, s in sums.items() if feasible[g]}
-    return min(ok, key=ok.get)
+    if not ok:
+        raise ValueError(
+            f"best_geometry: no feasible geometry for system "
+            f"{system!r} at {bits}-bit precision among "
+            f"{sorted(sums, key=_geom_key)} — every candidate exceeds "
+            "the wire-IR-drop precision bound "
+            "(neural_core.analog_precision_feasible)")
+    return min(ok, key=lambda g: (ok[g],) + _geom_key(g))

@@ -17,15 +17,18 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Union
 
-from repro.chip.compile import CompiledChip, compile_chip
+from repro.chip.compile import (CompiledChip, compile_chip,
+                                validate_stream_rate)
 from repro.core.crossbar_layer import (MLPSpec, ProgrammedMLP, mlp_init)
+from repro.core.neural_core import CoreGeometry
 from repro.deploy.report import DeploymentReport, deployment_report
 from repro.deploy.router import (DeploymentStats,
                                  DistributedMultiAppRouter,
                                  MultiAppRouter)
 from repro.deploy.spec import AppSpec, DeploymentSpec
 from repro.fleet.shard import ShardedChip
-from repro.launch.mesh import make_fleet_mesh, mesh_spans_processes
+from repro.launch.mesh import (make_chip_submesh, make_fleet_mesh,
+                               mesh_spans_processes)
 
 
 def _resolve_network(app: AppSpec):
@@ -87,7 +90,25 @@ class Deployment:
 
     def __init__(self, spec: DeploymentSpec):
         self.spec = spec
-        if spec.mesh is not None:
+        self.chip_systems: Optional[tuple] = None
+        self._submeshes: Dict[str, Any] = {}
+        if spec.chip_systems is not None:
+            # heterogeneous fleet: one device per declared chip, each
+            # app placed on the submesh of its own system's chips
+            self.mesh = make_fleet_mesh(len(spec.chip_systems))
+            if mesh_spans_processes(self.mesh):
+                raise ValueError(
+                    "deploy: a heterogeneous (chip_systems) fleet is "
+                    "single-process only — per-app submeshes break "
+                    "the SPMD-lockstep collective schedule a "
+                    "distributed deployment requires")
+            self.chip_systems = spec.chip_systems
+            for system in sorted(set(spec.chip_systems)):
+                idx = [i for i, s in enumerate(spec.chip_systems)
+                       if s == system]
+                self._submeshes[system] = \
+                    make_chip_submesh(self.mesh, idx)
+        elif spec.mesh is not None:
             self.mesh = spec.mesh
             if "chip" not in self.mesh.axis_names:
                 raise ValueError(
@@ -104,17 +125,40 @@ class Deployment:
         self._recals: Dict[str, Any] = {}
         for app in spec.apps:
             networks, params, kw = _resolve_network(app)
+            app_mesh = self._submeshes.get(app.system, self.mesh)
+            app_chips = app_mesh.devices.size
+            # validate the SLO exactly once, at the scope that serves
+            # it (the app's fleet placement) — the compile defers, and
+            # the one diagnostic carries both capacity levels
             chip = compile_chip(networks, params=params,
                                 system=app.system,
+                                geom=CoreGeometry(*app.geom)
+                                if app.geom is not None else None,
                                 weight_bits=app.weight_bits,
                                 noise=app.noise,
-                                strict_rate=spec.strict_rate, **kw)
+                                strict_rate=spec.strict_rate,
+                                validate_rate=False, **kw)
+            rate = kw.get("items_per_second", 0.0)
             sharded = None
             if chip.plan is not None:
                 sharded = ShardedChip(
-                    chip, self.mesh,
-                    items_per_second=kw.get("items_per_second", 0.0),
+                    chip, app_mesh,
+                    items_per_second=rate,
                     strict_rate=spec.strict_rate)
+            else:
+                # analytic-only tenants never build a ShardedChip, so
+                # their SLO is validated here, at the same fleet scope
+                validate_stream_rate(
+                    rate, chip.replication * app_chips,
+                    chip.route, spec.strict_rate,
+                    context="deploy",
+                    fabric=(f"fleet replica(s) ({app_chips} chip(s) x "
+                            f"{chip.replication} replica(s))"),
+                    remedy=("Add chips of this app's system, use a "
+                            "larger core geometry, or lower the "
+                            "app's items_per_second SLO."),
+                    stacklevel=4,
+                    chip_replicas=chip.replication)
             mlp_spec = networks if isinstance(networks, MLPSpec) else None
             self._members[app.name] = _Member(app, chip, sharded,
                                               mlp_spec, params)
@@ -125,14 +169,17 @@ class Deployment:
         self.router: Optional[MultiAppRouter] = None
         if streamable:
             # each router schedules lanes for the chips it can address:
-            # all of them single-process, only the LOCAL ones on a
+            # all of the member's chips single-process (its own submesh
+            # on a heterogeneous fleet), only the LOCAL ones on a
             # distributed mesh (same contract as DistributedFleetRouter
             # — every rank runs lanes_per_chip × n_local_chips, so the
             # fleet-wide budget still sums to lanes_per_chip × n_chips)
-            lane_chips = next(iter(streamable.values())).n_local_chips \
-                if self.is_distributed else self.n_chips
+            def lane_chips(m):
+                return m.n_local_chips if self.is_distributed \
+                    else m.n_chips
             lanes = {name: self._members[name].spec.lanes_per_chip *
-                     lane_chips for name in streamable}
+                     lane_chips(member)
+                     for name, member in streamable.items()}
             limits = {name: (self._members[name].spec.queue_limit
                              if self._members[name].spec.queue_limit
                              is not None else spec.queue_limit)
@@ -150,6 +197,15 @@ class Deployment:
 
     def chip(self, app: str) -> CompiledChip:
         return self._member(app).chip
+
+    def app_chips(self, app: str) -> int:
+        """How many fleet chips serve ``app`` — the whole mesh on a
+        homogeneous fleet, the app's system's submesh on a
+        heterogeneous one."""
+        m = self._member(app)
+        if self.chip_systems is None:
+            return self.n_chips
+        return self._submeshes[m.spec.system].devices.size
 
     def params(self, app: str):
         """The app's last-programmed weight parameters (None for
@@ -342,9 +398,13 @@ class Deployment:
         if self.router is not None and self.router.steps:
             served = self.stats_global() if self.is_distributed \
                 else self.stats()
-        return deployment_report(
-            {name: m.chip for name, m in self._members.items()},
-            self.n_chips, served)
+        chips = {name: m.chip for name, m in self._members.items()}
+        if self.chip_systems is None:
+            return deployment_report(chips, self.n_chips, served)
+        # heterogeneous: each app's row scales by ITS submesh size
+        per_app = {name: self.app_chips(name) for name in chips}
+        return deployment_report(chips, per_app, served,
+                                 total_chips=self.n_chips)
 
     # ---------------- elastic resize ------------------------------- #
     def resize(self, n_chips: Optional[int] = None, *,
@@ -372,6 +432,12 @@ class Deployment:
                 "multi-process topology change is a membership "
                 "change; use repro.fleet.ha (degrade_to_local / "
                 "HAFleetServer) instead")
+        if self.chip_systems is not None:
+            raise ValueError(
+                "resize: this is a heterogeneous (chip_systems) fleet "
+                "— its chip count is the per-system allocation; "
+                "re-deploy with a new chip_systems tuple (or re-run "
+                "repro.tune) instead of resizing in place")
         if mesh is None:
             mesh = make_fleet_mesh(n_chips)
         elif "chip" not in mesh.axis_names:
@@ -441,7 +507,7 @@ def deploy(spec: Union[DeploymentSpec, Sequence[AppSpec], AppSpec],
 
     Accepts a full :class:`DeploymentSpec`, a sequence of
     :class:`AppSpec`, or one bare :class:`AppSpec`; ``**kw`` (n_chips,
-    mesh, queue_limit, use_kernel, strict_rate) build the
+    mesh, chip_systems, queue_limit, use_kernel, strict_rate) build the
     DeploymentSpec in the shorthand forms.
     """
     if isinstance(spec, AppSpec):

@@ -19,7 +19,13 @@ from repro.fleet.report import FleetReport, fleet_report
 
 @dataclasses.dataclass(frozen=True)
 class DeploymentReport:
-    """Per-app fleet reports plus the co-resident roll-up."""
+    """Per-app fleet reports plus the co-resident roll-up.
+
+    ``n_chips`` is the whole fleet's chip count; on a heterogeneous
+    fleet each app's row carries ITS submesh size (``rep.n_chips``),
+    and the roll-up stays the per-app sum — chips of different systems
+    never double-count because each app's cores live only on its own
+    system's chips."""
     n_chips: int
     apps: Dict[str, FleetReport]
     # linear co-residency roll-up (Σ over apps of the per-app fleet)
@@ -50,22 +56,46 @@ class DeploymentReport:
         return "\n".join([head] + lines)
 
 
-def deployment_report(chips: Mapping[str, object], n_chips: int,
-                      served=None) -> DeploymentReport:
+def deployment_report(chips: Mapping[str, object], n_chips,
+                      served=None, *,
+                      total_chips: Optional[int] = None
+                      ) -> DeploymentReport:
     """Compose the multi-app report from ``{app: CompiledChip}``.
 
     Pure in the chips (no devices touched — the golden suite pins these
     numbers without building a mesh); ``served`` is a live router's
     :class:`repro.deploy.DeploymentStats`, folded in when given.
+
+    ``n_chips`` is an int (every app spans the whole fleet — the
+    homogeneous case) or a ``{app: n}`` mapping for heterogeneous
+    fleets, where each app's cores occupy only its own system's
+    submesh. Apps of one system SHARE that system's chips, so the
+    fleet-wide count cannot be inferred from the per-app mapping —
+    pass ``total_chips`` (the mesh size) alongside; without it the
+    report uses the mapping's max, which is right only when every
+    app lives on one submesh.
     """
+    if isinstance(n_chips, Mapping):
+        missing = sorted(set(chips) - set(n_chips))
+        if missing:
+            raise ValueError(f"deployment_report: no n_chips entry "
+                             f"for app(s) {missing}")
+        per_app = {name: int(n_chips[name]) for name in chips}
+        fleet_chips = int(total_chips) if total_chips is not None \
+            else max(per_app.values())
+    else:
+        per_app = {name: int(n_chips) for name in chips}
+        fleet_chips = int(n_chips) if total_chips is None \
+            else int(total_chips)
     apps = {}
     for name, chip in chips.items():
-        member = types.SimpleNamespace(chip=chip, n_chips=n_chips)
+        member = types.SimpleNamespace(chip=chip,
+                                       n_chips=per_app[name])
         apps[name] = fleet_report(member)
     cap = sum(r.capacity_items_per_second for r in apps.values())
     served_fleet = served.fleet if served is not None else None
     return DeploymentReport(
-        n_chips=n_chips,
+        n_chips=fleet_chips,
         apps=apps,
         cores=sum(r.cores for r in apps.values()),
         area_mm2=sum(r.area_mm2 for r in apps.values()),

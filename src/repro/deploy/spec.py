@@ -18,6 +18,23 @@ from typing import Any, Optional, Tuple
 from repro.core.systems import normalize_system
 
 
+def _check_queue_limit(limit, context: str) -> None:
+    """``queue_limit`` semantics, pinned: ``None`` = unbounded
+    admission, positive = bounded. Zero is an explicit error — it used
+    to be ambiguous between "unbounded" (falsy, so some call sites
+    treated it as no limit) and "reject everything" (a zero-capacity
+    queue can never admit, so serving could never make progress)."""
+    if limit is None:
+        return
+    if not isinstance(limit, int) or isinstance(limit, bool) \
+            or limit < 1:
+        raise ValueError(
+            f"{context}: queue_limit must be a positive int or None "
+            f"(got {limit!r}); None means unbounded admission — a "
+            "queue_limit of 0 would be a zero-capacity queue that can "
+            "never admit a request")
+
+
 @dataclasses.dataclass(frozen=True)
 class AppSpec:
     """One tenant application.
@@ -35,11 +52,16 @@ class AppSpec:
     ``system`` accepts any alias (``"memristor"``/``"1t1m"`` /
     ``"digital"``/``"sram"``); ``items_per_second`` is the tenant's SLO
     (validated against the routed TDM fabric × fleet at deploy time);
-    ``lanes_per_chip`` × fleet chips is the tenant's lane budget and
-    ``queue_limit`` its admission bound (None → the deployment-wide
-    default). ``analytic=True`` deploys a report-only tenant — no
-    weight synthesis, no tile programming — for sizing studies that
-    never stream.
+    ``geom`` pins the tile geometry as a ``(rows, cols)`` pair (None →
+    the system's paper optimum — what ``repro.tune`` sets when the
+    search picks a non-default geometry). ``lanes_per_chip`` × fleet
+    chips is the tenant's lane budget and ``queue_limit`` its
+    admission bound: a positive int bounds admission, ``None`` (the
+    default) defers to the deployment-wide default, itself ``None`` =
+    unbounded; 0 is an explicit error (a zero-capacity queue could
+    never admit a request). ``analytic=True`` deploys a report-only
+    tenant — no weight synthesis, no tile programming — for sizing
+    studies that never stream.
 
     ``noise`` (a :class:`repro.variability.NoiseModel`, or None for
     ideal devices) compiles this tenant onto non-ideal memristors:
@@ -60,6 +82,7 @@ class AppSpec:
     weight_bits: int = 8
     analytic: bool = False
     noise: Any = None
+    geom: Optional[Tuple[int, int]] = None
 
     def __post_init__(self):
         if not self.name or not isinstance(self.name, str):
@@ -68,6 +91,16 @@ class AppSpec:
         if self.lanes_per_chip < 1:
             raise ValueError(f"AppSpec {self.name!r}: lanes_per_chip "
                              "must be >= 1")
+        _check_queue_limit(self.queue_limit, f"AppSpec {self.name!r}")
+        if self.geom is not None:
+            geom = tuple(self.geom)
+            if len(geom) != 2 or not all(
+                    isinstance(g, int) and g >= 1 for g in geom):
+                raise ValueError(
+                    f"AppSpec {self.name!r}: geom must be a "
+                    f"(rows, cols) pair of positive ints (got "
+                    f"{self.geom!r})")
+            object.__setattr__(self, "geom", geom)
         if self.analytic and self.params is not None:
             raise ValueError(f"AppSpec {self.name!r}: analytic=True "
                              "is report-only — params would never be "
@@ -88,9 +121,15 @@ class DeploymentSpec:
     every visible device); pass ``mesh`` instead to reuse a launcher
     mesh — including a ``make_distributed_fleet_mesh`` spanning
     ``jax.distributed`` processes, which makes every verb on the
-    resulting deployment SPMD-lockstep. ``queue_limit`` is the default
-    per-app admission bound; ``strict_rate`` turns infeasible per-app
-    SLOs into errors instead of :class:`repro.chip.ChipRateWarning`.
+    resulting deployment SPMD-lockstep. ``chip_systems`` instead builds
+    a HETEROGENEOUS fleet: one entry per chip naming its system (e.g.
+    ``("memristor", "digital")``), each app placed on the submesh of
+    its own system's chips — memristor and digital chips co-resident
+    in one fleet, which is what ``repro.tune`` emits when the cheapest
+    fabric is mixed. ``queue_limit`` is the default per-app admission
+    bound (``None`` = unbounded; 0 is an explicit error); ``strict_rate``
+    turns infeasible per-app SLOs into errors instead of
+    :class:`repro.chip.ChipRateWarning`.
     """
     apps: Tuple[AppSpec, ...]
     n_chips: Optional[int] = None
@@ -98,6 +137,7 @@ class DeploymentSpec:
     queue_limit: Optional[int] = None
     use_kernel: bool = False
     strict_rate: bool = False
+    chip_systems: Optional[Tuple[str, ...]] = None
 
     def __post_init__(self):
         apps = tuple(self.apps)
@@ -112,6 +152,27 @@ class DeploymentSpec:
         if self.mesh is not None and self.n_chips is not None:
             raise ValueError("DeploymentSpec: pass n_chips OR mesh, "
                              "not both (the mesh fixes the chip count)")
+        _check_queue_limit(self.queue_limit, "DeploymentSpec")
+        if self.chip_systems is not None:
+            if self.n_chips is not None or self.mesh is not None:
+                raise ValueError(
+                    "DeploymentSpec: chip_systems fixes both the chip "
+                    "count and each chip's system — don't pass "
+                    "n_chips or mesh alongside it")
+            systems = tuple(
+                normalize_system(s, context="DeploymentSpec "
+                                            "chip_systems")
+                for s in self.chip_systems)
+            if not systems:
+                raise ValueError("DeploymentSpec: chip_systems needs "
+                                 "at least one chip")
+            object.__setattr__(self, "chip_systems", systems)
+            missing = sorted({a.system for a in apps} - set(systems))
+            if missing:
+                raise ValueError(
+                    f"DeploymentSpec: app system(s) {missing} have no "
+                    f"chip in chip_systems={list(systems)} — every "
+                    "app needs at least one chip of its own system")
 
 
 def single_app(network, params=None, *, name: str = "app",
@@ -121,7 +182,8 @@ def single_app(network, params=None, *, name: str = "app",
     compile→shard→route path as one call)."""
     app_kw = {k: kw.pop(k) for k in
               ("items_per_second", "lanes_per_chip", "queue_limit",
-               "seed", "weight_bits", "analytic", "noise") if k in kw}
+               "seed", "weight_bits", "analytic", "noise", "geom")
+              if k in kw}
     return DeploymentSpec(
         apps=(AppSpec(name, network, params=params, system=system,
                       **app_kw),),

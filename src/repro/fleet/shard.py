@@ -95,7 +95,11 @@ class ShardedChip:
     ``replication × n_chips`` fabric copies — capacity multiplies with
     the fleet, and silently assuming so is exactly the bug this check
     closes. Infeasible targets warn (:class:`ChipRateWarning`) or, with
-    ``strict_rate=True``, raise.
+    ``strict_rate=True``, raise. When the fleet target IS the rate the
+    compile already validated (``chip.rate_validated``), the check is
+    skipped: fleet capacity is chip capacity × n_chips, so the
+    compile's verdict (pass or one warning) already covers it —
+    re-checking would only duplicate the diagnostic.
     """
     chip: CompiledChip
     mesh: jax.sharding.Mesh
@@ -108,19 +112,23 @@ class ShardedChip:
             raise ValueError(
                 "shard_chip needs a streamable chip (compiled with "
                 "weights); this one is analytic-only")
-        validate_stream_rate(
-            self.items_per_second,
-            self.chip.replication * self.mesh.devices.size,
-            self.chip.route, self.strict_rate,
-            context="shard_chip",
-            fabric=(f"fleet replica(s) ({self.mesh.devices.size} "
-                    f"chip(s) x {self.chip.replication} replica(s))"),
-            remedy=("Add chips to the fleet, use a larger core "
-                    "geometry, or lower the fleet target rate."),
-            # point the warning at shard_chip's caller: stacklevel
-            # counts validate_stream_rate(1) → __post_init__(2) →
-            # dataclass __init__(3) → shard_chip(4) → user(5)
-            stacklevel=5)
+        if not (self.chip.rate_validated and
+                self.items_per_second == self.chip.items_per_second):
+            validate_stream_rate(
+                self.items_per_second,
+                self.chip.replication * self.mesh.devices.size,
+                self.chip.route, self.strict_rate,
+                context="shard_chip",
+                fabric=(f"fleet replica(s) ({self.mesh.devices.size} "
+                        f"chip(s) x {self.chip.replication} "
+                        f"replica(s))"),
+                remedy=("Add chips to the fleet, use a larger core "
+                        "geometry, or lower the fleet target rate."),
+                # point the warning at shard_chip's caller: stacklevel
+                # counts validate_stream_rate(1) → __post_init__(2) →
+                # dataclass __init__(3) → shard_chip(4) → user(5)
+                stacklevel=5,
+                chip_replicas=self.chip.replication)
         self._fns: Dict[tuple, callable] = {}
         # program the fleet ONCE: replicate the tile image onto every
         # mesh device at shard time (§III.D program-once, fleet-level).
@@ -350,7 +358,8 @@ class ShardedChip:
                     f"chip(s) x {self.chip.replication} replica(s))"),
             remedy=("Add chips to the fleet, use a larger core "
                     "geometry, or lower the fleet target rate."),
-            stacklevel=3)
+            stacklevel=3,
+            chip_replicas=self.chip.replication)
 
     def reprogram(self, params, **kw) -> None:
         """Live weight swap: re-encode ``params`` into tile state for

@@ -41,6 +41,29 @@ def make_fleet_mesh(n_chips: Optional[int] = None):
     return make_auto_mesh((n,), ("chip",))
 
 
+def make_chip_submesh(mesh, indices):
+    """1-D ``"chip"`` mesh over a subset of ``mesh``'s devices — the
+    heterogeneous-fleet building block: ``repro.deploy`` gives each
+    chip *system* (memristor / digital) its own submesh of the one
+    fleet, and each app's plan is placed on its system's submesh.
+
+    ``indices`` index into the flat device order of ``mesh``. Single
+    process only: a submesh is placed with plain ``device_put``, which
+    needs every device addressable from this process.
+    """
+    import numpy as np
+
+    flat = list(mesh.devices.flat)
+    if not indices:
+        raise ValueError("make_chip_submesh: at least one device index")
+    bad = [i for i in indices if not 0 <= i < len(flat)]
+    if bad:
+        raise ValueError(f"make_chip_submesh: indices {bad} out of "
+                         f"range for a {len(flat)}-device mesh")
+    devs = [flat[i] for i in indices]
+    return jax.sharding.Mesh(np.asarray(devs), ("chip",))
+
+
 def make_distributed_fleet_mesh(chips_per_process: Optional[int] = None):
     """1-D ``"chip"`` mesh spanning every process of a
     ``jax.distributed``-initialized job (process-major device order, so

@@ -1,0 +1,65 @@
+"""repro.tune — SLO/budget-driven fabric autotuning.
+
+The paper fixes one system and hand-picks the core geometry from the
+Figs. 13–14 sweeps; this package runs that sweep as a SEARCH. Declare
+what must be served (a :class:`repro.deploy.DeploymentSpec` whose apps
+carry ``items_per_second`` SLOs) and what the fleet may spend (a
+:class:`TuneBudget` of area/power/chips), and ``tune`` walks system ×
+geometry × chip count per app through the Tables I–VI cost oracle and
+the routed TDM throughput gate, returning the cheapest concrete
+fabric as a :class:`TunedFabric`:
+
+  from repro.deploy import AppSpec, DeploymentSpec, deploy
+  from repro.tune import TuneBudget, tune
+
+  tuned = tune(DeploymentSpec(apps=(
+      AppSpec("deep", "deep", items_per_second=1e5),
+      AppSpec("ocr", "ocr", items_per_second=1e5, weight_bits=12),
+  )), TuneBudget(power_mw=120.0))
+  print(tuned.report())       # Figs. 13–14-style frontier + why losers lost
+  d = deploy(tuned.spec)      # heterogeneous chip_systems mesh, live
+
+When the cheapest assignment mixes systems (e.g. a high-precision
+tenant that fails the analog IR-drop bound goes digital while the
+rest stay 1T1M), the emitted spec is a heterogeneous ``chip_systems``
+fleet — memristor and digital chips co-resident in one deployment.
+
+Self-check:  PYTHONPATH=src python -m repro.tune --selftest
+(2 simulated devices; asserts the tuned heterogeneous fabric costs no
+more than every feasible homogeneous candidate, streams at rel 0.0
+against the legacy single-system path, and rolls per-app stats up
+exactly on the mixed mesh).
+
+Submodule imports are lazy (PEP 562) so ``python -m repro.tune`` can
+pin ``--xla_force_host_platform_device_count`` before jax initializes,
+same as ``repro.deploy``.
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    "TuneBudget": "repro.tune.search",
+    "CandidatePoint": "repro.tune.search",
+    "ComboPoint": "repro.tune.search",
+    "TunedFabric": "repro.tune.search",
+    "candidate_point": "repro.tune.search",
+    "tune": "repro.tune.search",
+    "DEFAULT_GEOMETRIES": "repro.tune.search",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    value = getattr(importlib.import_module(mod), name)
+    globals()[name] = value
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

@@ -535,6 +535,169 @@ def test_deployment_report_composes_linearly():
 
 
 # ------------------------------------------------------------------- #
+# queue_limit boundary semantics (satellite)
+# ------------------------------------------------------------------- #
+def test_queue_limit_zero_is_an_explicit_error(spec_a):
+    """0 used to be ambiguous between "unbounded" (falsy) and "reject
+    everything" (a zero-capacity queue never admits): now a loud
+    ValueError at spec build, on both the app and deployment level."""
+    for bad in (0, -3, True, 2.0):
+        with pytest.raises(ValueError, match="queue_limit"):
+            AppSpec("x", spec_a, queue_limit=bad)
+        with pytest.raises(ValueError, match="queue_limit"):
+            DeploymentSpec(apps=(AppSpec("x", spec_a),),
+                           queue_limit=bad)
+    # boundary: 1 is the smallest bounded queue; None means unbounded
+    assert AppSpec("x", spec_a, queue_limit=1).queue_limit == 1
+    assert AppSpec("x", spec_a).queue_limit is None
+    assert DeploymentSpec(apps=(AppSpec("x", spec_a),),
+                          queue_limit=1).queue_limit == 1
+    assert DeploymentSpec(apps=(AppSpec("x", spec_a),)).queue_limit \
+        is None
+
+
+def test_queue_limit_none_admits_unboundedly(spec_a, params_a):
+    d = deploy(AppSpec("a", spec_a, params=params_a,
+                       lanes_per_chip=1))
+    admitted = [d.submit("a", np.ones((1, DIMS_A[0]), np.float32))
+                for _ in range(12)]
+    assert all(admitted)
+    d.run_until_drained()
+    assert d.stats().fleet.rejected == 0
+    d.close()
+
+
+# ------------------------------------------------------------------- #
+# rate validation fires exactly ONCE, with both capacity scopes
+# (satellite)
+# ------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def deep_mlp():
+    """The deep app's dims: compute capacity exceeds the routed TDM
+    limit, so a rate that drives every replica at compute capacity is
+    un-routable — the canonical infeasible-SLO construction (same as
+    test_chip's)."""
+    mspec = MLPSpec((784, 200, 100, 10), activation="threshold",
+                    out_activation="linear")
+    return mspec, mlp_init(jax.random.PRNGKey(25), mspec)
+
+
+def test_deploy_rate_warning_fires_exactly_once(deep_mlp):
+    """deploy() used to warn twice for one infeasible SLO (compile
+    then shard); now exactly one ChipRateWarning, carrying BOTH the
+    per-chip and fleet-wide capacity numbers."""
+    mspec, params = deep_mlp
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        d = deploy(AppSpec("a", mspec, params=params,
+                           items_per_second=1e12))
+    rate = [x for x in w
+            if issubclass(x.category, chip_compile.ChipRateWarning)]
+    assert len(rate) == 1, [str(x.message) for x in rate]
+    msg = str(rate[0].message)
+    assert "items/s per chip" in msg and "items/s fleet-wide" in msg
+    d.close()
+
+
+def test_deploy_rate_warning_once_for_analytic_tenants():
+    """The analytic-only path validates at the same fleet scope,
+    also exactly once."""
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        d = deploy(AppSpec("deep", "deep", analytic=True,
+                           items_per_second=1e12))
+    rate = [x for x in w
+            if issubclass(x.category, chip_compile.ChipRateWarning)]
+    assert len(rate) == 1, [str(x.message) for x in rate]
+    assert "items/s fleet-wide" in str(rate[0].message)
+    d.close()
+
+
+def test_deploy_strict_rate_raises_exactly_once(deep_mlp):
+    mspec, params = deep_mlp
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        with pytest.raises(ValueError, match="items/s fleet-wide"):
+            deploy(DeploymentSpec(
+                apps=(AppSpec("a", mspec, params=params,
+                              items_per_second=1e12),),
+                strict_rate=True))
+    assert not [x for x in w
+                if issubclass(x.category,
+                              chip_compile.ChipRateWarning)]
+
+
+def test_legacy_compile_then_shard_validates_once(deep_mlp):
+    """compile_chip at a rate already vouches for it; shard_chip at
+    the SAME rate must not warn again (the fleet check is vacuous
+    when the chip-level one passed or already diagnosed). A DIFFERENT
+    fleet rate still re-validates."""
+    mspec, params = deep_mlp
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        chip = compile_chip(mspec, params=params,
+                            items_per_second=1e12)
+        shard_chip(chip, items_per_second=1e12)
+    rate = [x for x in w
+            if issubclass(x.category, chip_compile.ChipRateWarning)]
+    assert len(rate) == 1, [str(x.message) for x in rate]
+    with warnings.catch_warnings(record=True) as w2:
+        warnings.simplefilter("always")
+        shard_chip(chip, items_per_second=2e12)
+    rate2 = [x for x in w2
+             if issubclass(x.category, chip_compile.ChipRateWarning)]
+    assert len(rate2) == 1
+    assert "items/s per chip" in str(rate2[0].message)
+
+
+# ------------------------------------------------------------------- #
+# heterogeneous chip_systems specs (tentpole surface)
+# ------------------------------------------------------------------- #
+def test_chip_systems_spec_validation(spec_a, spec_b):
+    with pytest.raises(ValueError, match="n_chips or mesh"):
+        DeploymentSpec(apps=(AppSpec("a", spec_a),), n_chips=2,
+                       chip_systems=("memristor", "digital"))
+    with pytest.raises(ValueError, match="at least one chip"):
+        DeploymentSpec(apps=(AppSpec("a", spec_a),), chip_systems=())
+    with pytest.raises(ValueError, match="no chip in chip_systems"):
+        DeploymentSpec(apps=(AppSpec("a", spec_a, system="digital"),),
+                       chip_systems=("memristor",))
+    # aliases normalize, and app->submesh coverage is checked
+    s = DeploymentSpec(apps=(AppSpec("a", spec_a),
+                             AppSpec("b", spec_b, system="sram")),
+                       chip_systems=("1t1m", "sram"))
+    assert s.chip_systems == ("memristor", "digital")
+
+
+def test_appspec_geom_validation(spec_a):
+    with pytest.raises(ValueError, match="geom"):
+        AppSpec("x", spec_a, geom=(128,))
+    with pytest.raises(ValueError, match="geom"):
+        AppSpec("x", spec_a, geom=(128, 0))
+    assert AppSpec("x", spec_a, geom=[128, 64]).geom == (128, 64)
+
+
+def test_heterogeneous_fleet_refuses_resize_and_singleproc_mesh(
+        spec_a, spec_b, params_a, params_b):
+    """On 1 visible device a 2-system fleet cannot build (one chip per
+    declared system); with enough devices it refuses resize() — both
+    loud errors, not silent truncation. The full mixed-mesh serving
+    path runs in the 2-device subprocess test below."""
+    spec = DeploymentSpec(apps=(
+        AppSpec("a", spec_a, params=params_a),
+        AppSpec("b", spec_b, params=params_b, system="digital"),
+    ), chip_systems=("memristor", "digital"))
+    if len(jax.devices()) < 2:
+        with pytest.raises(ValueError, match="chips requested"):
+            deploy(spec)
+        return
+    d = deploy(spec)
+    with pytest.raises(ValueError, match="chip_systems"):
+        d.resize(1)
+    d.close()
+
+
+# ------------------------------------------------------------------- #
 # 2 simulated devices, end to end (subprocess)
 # ------------------------------------------------------------------- #
 _TWO_DEVICE_SCRIPT = """
@@ -585,6 +748,84 @@ def test_two_device_deployment_subprocess(sim_subprocess):
     assert res["devices"] == 2 and res["n_chips"] == 2
     assert res["rel"] == 0.0
     assert res["exact"]
+
+
+# ------------------------------------------------------------------- #
+# heterogeneous fleet, end to end (subprocess, tentpole)
+# ------------------------------------------------------------------- #
+_HETERO_SCRIPT = """
+import json
+import jax
+import numpy as np
+from repro.chip import compile_chip
+from repro.core.crossbar_layer import MLPSpec, mlp_init
+from repro.deploy import AppSpec, DeploymentSpec, deploy
+from repro.fleet import shard_chip
+
+spec_a = MLPSpec((64, 48, 10), activation="threshold",
+                 out_activation="linear")
+spec_b = MLPSpec((32, 16, 4), activation="threshold",
+                 out_activation="linear")
+pa = mlp_init(jax.random.PRNGKey(0), spec_a)
+pb = mlp_init(jax.random.PRNGKey(7), spec_b)
+d = deploy(DeploymentSpec(apps=(
+    AppSpec("mem", spec_a, params=pa, lanes_per_chip=2),
+    AppSpec("dig", spec_b, params=pb, system="digital"),
+), chip_systems=("memristor", "digital")))
+
+# each app streams on ITS system's single-chip submesh, bit-equal to
+# the legacy single-system path on one chip
+rels = {}
+for name, mspec, p, din in (("mem", spec_a, pa, 64),
+                            ("dig", spec_b, pb, 32)):
+    system = "memristor" if name == "mem" else "digital"
+    legacy = shard_chip(compile_chip(mspec, params=p, system=system),
+                        n_chips=1)
+    x = np.asarray(jax.random.uniform(jax.random.PRNGKey(1),
+                                      (7, din)), np.float32)
+    rels[name] = float(np.max(np.abs(
+        np.asarray(d.stream(name, x)) - np.asarray(legacy.stream(x)))))
+
+rng = np.random.default_rng(3)
+for i in range(4):
+    d.submit("mem", rng.uniform(0, 1, (3, 64)).astype(np.float32))
+    d.submit("dig", rng.uniform(0, 1, (2, 32)).astype(np.float32))
+d.run_until_drained()
+s = d.stats()
+rep = d.report()
+print(json.dumps({
+    "devices": len(jax.devices()),
+    "n_chips": d.n_chips,
+    "chip_systems": list(d.chip_systems),
+    "app_chips": {"mem": d.app_chips("mem"), "dig": d.app_chips("dig")},
+    "rels": rels,
+    "lanes": {a: s.apps[a].lanes for a in s.apps},
+    "report_rows": {a: rep.apps[a].n_chips for a in rep.apps},
+    "report_total": rep.n_chips,
+    "rollup_exact": (
+        sum(a.requests for a in s.apps.values()) ==
+        s.fleet.requests == 8 and
+        sum(a.items for a in s.apps.values()) == s.fleet.items == 20
+        and sum(a.lanes for a in s.apps.values()) == s.fleet.lanes),
+}))
+"""
+
+
+def test_heterogeneous_two_device_subprocess(sim_subprocess):
+    """Memristor and digital chips co-resident in one fleet: per-app
+    single-chip submeshes, lanes scaled by the app's OWN chip count,
+    report rows per submesh with the fleet total = the mesh size, and
+    the stats roll-up exact across systems."""
+    res = sim_subprocess(_HETERO_SCRIPT, n_devices=2)
+    assert res["devices"] == 2 and res["n_chips"] == 2
+    assert res["chip_systems"] == ["memristor", "digital"]
+    assert res["app_chips"] == {"mem": 1, "dig": 1}
+    assert res["rels"] == {"mem": 0.0, "dig": 0.0}
+    # lanes_per_chip × the app's submesh size (1 chip each here)
+    assert res["lanes"] == {"mem": 2, "dig": 4}
+    assert res["report_rows"] == {"mem": 1, "dig": 1}
+    assert res["report_total"] == 2
+    assert res["rollup_exact"]
 
 
 # ------------------------------------------------------------------- #

@@ -1,0 +1,117 @@
+"""Golden regression: Figs. 13–14 design-space numbers, pinned.
+
+The DSE sweep now has two consumers that must never drift silently:
+the Figs. 13–14 benchmark printout (``benchmarks/fig13_14_dse.py``)
+and the ``repro.tune`` autotuner, whose search walks the same
+geometry × system space through the same cost oracle. This suite pins
+``design_space()`` — every app × geometry cell (area, power, cores,
+feasibility, normalized values) for both systems — and the
+``best_geometry()`` selections (the paper's §V.B optima: 128×64
+memristor, 256×128 digital) to a committed JSON fixture at 1e-9
+relative tolerance, same convention as ``fleet_tables.json``: an
+intended cost-model change must regenerate the fixture in the same
+diff (a reviewable event, not a silent drift).
+
+Regenerate after an INTENDED accounting change:
+
+    PYTHONPATH=src python tests/test_golden_dse.py --regen
+"""
+import json
+import os
+import sys
+
+import pytest
+
+from repro.core.costmodel import best_geometry, design_space
+
+GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "golden", "dse_tables.json")
+SYSTEMS = ("memristor", "digital")
+RTOL = 1e-9
+
+
+def compute_dse() -> dict:
+    """Every number the fixture pins, from the live code paths."""
+    return {
+        "design_space": {s: design_space(s) for s in SYSTEMS},
+        "best_geometry": {s: best_geometry(s) for s in SYSTEMS},
+    }
+
+
+def _assert_close(got, want, path=""):
+    if isinstance(want, dict):
+        assert isinstance(got, dict) and set(got) == set(want), \
+            f"{path}: keys {sorted(got)} != {sorted(want)}"
+        for k in want:
+            _assert_close(got[k], want[k], f"{path}.{k}")
+    elif isinstance(want, float) and not isinstance(want, bool):
+        assert got == pytest.approx(want, rel=RTOL, abs=1e-12), \
+            f"{path}: {got!r} != {want!r} (rel {RTOL})"
+    else:
+        assert got == want, f"{path}: {got!r} != {want!r}"
+
+
+@pytest.fixture(scope="module")
+def golden():
+    assert os.path.exists(GOLDEN_PATH), \
+        (f"missing {GOLDEN_PATH} — generate it with "
+         f"PYTHONPATH=src python tests/test_golden_dse.py --regen")
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def live():
+    return compute_dse()
+
+
+def test_golden_pins_paper_optima(golden):
+    """The committed fixture itself must carry the §V.B picks — a
+    fixture regenerated off a broken selection rule fails here before
+    any tolerance comparison."""
+    assert golden["best_geometry"] == {"memristor": "128x64",
+                                       "digital": "256x128"}
+
+
+@pytest.mark.parametrize("system", SYSTEMS)
+def test_design_space_matches_golden(golden, live, system):
+    _assert_close(live["design_space"][system],
+                  golden["design_space"][system], path=system)
+
+
+def test_best_geometry_matches_golden(golden, live):
+    assert live["best_geometry"] == golden["best_geometry"]
+
+
+@pytest.mark.parametrize("system", SYSTEMS)
+def test_infeasible_cells_only_analog(golden, system):
+    """Feasibility in the pinned sweep is exactly the analog IR-drop
+    story: every digital cell feasible; memristor infeasible cells are
+    the wide geometries (rows+cols above the 8-bit bound)."""
+    for app, rows in golden["design_space"][system].items():
+        for g, cell in rows.items():
+            rows_g, cols_g = map(int, g.split("x"))
+            expect = True if system == "digital" \
+                else (rows_g + cols_g) <= 196
+            assert cell["feasible"] == expect, (system, app, g)
+
+
+def _regen():
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    tables = compute_dse()
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(tables, f, indent=1, sort_keys=True)
+        f.write("\n")
+    n_cells = sum(len(rows)
+                  for s in SYSTEMS
+                  for rows in tables["design_space"][s].values())
+    print(f"wrote {GOLDEN_PATH} ({n_cells} app x geometry cells, "
+          f"optima {tables['best_geometry']})")
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        print(__doc__)
+        sys.exit(2)

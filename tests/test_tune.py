@@ -1,0 +1,184 @@
+"""repro.tune: the SLO/budget-driven fabric autotuner.
+
+Pure-search coverage (no devices — candidate costing runs the same
+analytic oracle the golden DSE suite pins): the IR-drop precision
+gate forcing a 12-bit tenant digital, the heterogeneous winner
+beating every feasible homogeneous assignment, budget gates rejecting
+with the binding constraint named, the emitted spec matching the
+deployment_report composition exactly, and determinism. The live
+mixed-mesh serving path runs in ``python -m repro.tune --selftest``
+and the heterogeneous subprocess test in ``test_deploy.py``.
+"""
+import dataclasses
+
+import pytest
+
+from repro.chip import compile_chip
+from repro.configs.paper_apps import APPS
+from repro.core.neural_core import CoreGeometry
+from repro.deploy import AppSpec, DeploymentSpec, deployment_report
+from repro.tune import (DEFAULT_GEOMETRIES, TuneBudget, candidate_point,
+                        tune)
+
+SLO = 1e5
+
+
+@pytest.fixture(scope="module")
+def duo_spec():
+    """The heterogeneity driver: same SLO, but ocr's 12-bit weights
+    fail the analog IR-drop bound on every memristor geometry."""
+    return DeploymentSpec(apps=(
+        AppSpec("deep", "deep", items_per_second=SLO),
+        AppSpec("ocr", "ocr", items_per_second=SLO, weight_bits=12),
+    ))
+
+
+@pytest.fixture(scope="module")
+def free(duo_spec):
+    return tune(duo_spec)
+
+
+def test_irdrop_gate_forces_heterogeneity(free):
+    assert all(not c.feasible and "IR-drop" in c.reason
+               for c in free.candidates
+               if c.app == "ocr" and c.system == "memristor")
+    assert free.assignment["deep"].system == "memristor"
+    assert free.assignment["ocr"].system == "digital"
+    assert set(free.chip_systems) == {"memristor", "digital"}
+
+
+def test_hetero_winner_beats_every_feasible_homogeneous(free):
+    homog = [f for f in free.frontier if f.feasible and f.homogeneous]
+    assert homog, "expected feasible all-digital assignments"
+    sel = [f for f in free.frontier if f.selected]
+    assert len(sel) == 1 and not sel[0].homogeneous
+    assert all(sel[0].cost_key() <= f.cost_key() for f in homog)
+
+
+def test_tuned_spec_is_deployable_and_annotated(free):
+    spec = free.spec
+    assert isinstance(spec, DeploymentSpec)
+    assert spec.chip_systems == free.chip_systems
+    for app in spec.apps:
+        pt = free.assignment[app.name]
+        assert app.system == pt.system and app.geom == pt.geom
+
+
+def test_every_app_capacity_meets_slo(free):
+    for pt in free.assignment.values():
+        assert pt.n_chips * pt.capacity_items_per_second >= SLO
+
+
+def test_tuner_cost_equals_deployment_report(free):
+    """The tuner's predicted cost IS the deployment_report roll-up of
+    the fabric it emits (same oracle, same per-app × submesh-size
+    composition) — at 1e-9, without touching a device."""
+    chips, per_app = {}, {}
+    n_per_system = {
+        s: free.chip_systems.count(s) for s in set(free.chip_systems)}
+    for app in free.spec.apps:
+        cfg = APPS[app.network]
+        chips[app.name] = compile_chip(
+            cfg.nets(app.system), system=app.system,
+            geom=CoreGeometry(*app.geom),
+            items_per_second=SLO,
+            sensor_flags=cfg.sensor_flags(app.system),
+            deps=cfg.net_deps(app.system),
+            tsv_bits_per_item=cfg.tsv_bits_per_item)
+        per_app[app.name] = n_per_system[app.system]
+    rep = deployment_report(chips, per_app,
+                            total_chips=len(free.chip_systems))
+    assert rep.area_mm2 == pytest.approx(free.area_mm2, rel=1e-9)
+    assert rep.power_mw == pytest.approx(free.power_mw, rel=1e-9)
+    assert rep.n_chips == free.n_chips
+
+
+def test_binding_power_budget_prices_homogeneous_out(duo_spec, free):
+    cheapest_homog = min(f.power_mw for f in free.frontier
+                         if f.feasible and f.homogeneous)
+    budget = TuneBudget(
+        power_mw=(free.power_mw + cheapest_homog) / 2)
+    tuned = tune(duo_spec, budget)
+    assert tuned.chip_systems == free.chip_systems
+    assert tuned.power_mw <= budget.power_mw
+    assert all(not f.feasible and "over power budget" in f.reason
+               for f in tuned.frontier if f.homogeneous)
+
+
+def test_infeasible_searches_raise_with_gate_named(duo_spec):
+    with pytest.raises(ValueError, match="IR-drop"):
+        tune(duo_spec, systems=("memristor",))
+    with pytest.raises(ValueError, match="over power budget"):
+        tune(duo_spec, TuneBudget(power_mw=1.0))
+    with pytest.raises(ValueError, match="area_mm2"):
+        TuneBudget(area_mm2=-1.0)
+
+
+def test_chip_budget_forces_coresidency(duo_spec):
+    """max_chips=1 cannot host a 2-system fleet, but both apps CAN
+    co-reside on one digital chip (apps of one system share its
+    chips, so the per-system demand is the max, not the sum) — the
+    tuner finds that instead of failing, and the frontier shows the
+    heterogeneous assignments rejected over the chip budget."""
+    tuned = tune(duo_spec, TuneBudget(max_chips=1))
+    assert tuned.n_chips == 1
+    assert tuned.chip_systems == ("digital",)
+    assert any(not f.feasible and "over chip budget" in f.reason
+               for f in tuned.frontier if not f.homogeneous)
+
+
+def test_search_is_deterministic(duo_spec, free):
+    again = tune(duo_spec)
+    assert again.chip_systems == free.chip_systems
+    assert again.area_mm2 == free.area_mm2
+    assert again.power_mw == free.power_mw
+    assert {a: (p.system, p.geometry, p.n_chips)
+            for a, p in again.assignment.items()} == \
+        {a: (p.system, p.geometry, p.n_chips)
+         for a, p in free.assignment.items()}
+
+
+def test_candidate_point_matches_specialized_cost():
+    """One hand-checked point: deep on memristor at the paper optimum
+    equals the Tables II–VI specialized cost at the same geometry."""
+    from repro.core.costmodel import specialized_cost
+
+    app = AppSpec("deep", "deep", items_per_second=SLO)
+    pt = candidate_point(app, "memristor", (128, 64))
+    ref = specialized_cost(APPS["deep"], "memristor",
+                           geom=CoreGeometry(128, 64))
+    assert pt.feasible and pt.n_chips == 1
+    assert pt.area_mm2 == pytest.approx(ref.area_mm2, rel=1e-9)
+    assert pt.power_mw == pytest.approx(ref.power_mw, rel=1e-9)
+
+
+def test_throughput_gate_splits_across_chips():
+    """An SLO above one chip's routed capacity shards the app across
+    ceil(SLO / per-chip) chips — and a max_chips budget turns that
+    into a named infeasibility."""
+    import math
+
+    app = AppSpec("deep", "deep", items_per_second=SLO)
+    base = candidate_point(app, "memristor", (128, 64))
+    # push far past what per-chip replication can absorb (the §V.C
+    # fan-out grows with the rate, but the routed TDM link does not)
+    big = dataclasses.replace(
+        app, items_per_second=base.capacity_items_per_second * 40)
+    pt = candidate_point(big, "memristor", (128, 64))
+    assert pt.feasible and pt.n_chips >= 2
+    assert pt.n_chips == math.ceil(pt.items_per_second /
+                                   pt.capacity_items_per_second)
+    capped = candidate_point(big, "memristor", (128, 64),
+                             max_chips=pt.n_chips - 1)
+    assert not capped.feasible and "throughput" in capped.reason
+
+
+def test_report_names_losers(free):
+    text = free.report()
+    assert "SELECTED" in text and "IR-drop" in text
+    assert "frontier" in text
+
+
+def test_default_geometries_cover_the_paper_sweep():
+    assert (128, 64) in DEFAULT_GEOMETRIES["memristor"]
+    assert (256, 128) in DEFAULT_GEOMETRIES["digital"]
