@@ -909,6 +909,143 @@ def _autotune() -> dict:
     return res
 
 
+_LM_SCRIPT = textwrap.dedent("""
+    import json, time
+    import jax
+    import numpy as np
+    from repro.configs import qwen1p5_0p5b
+    from repro.deploy import AppSpec, DeploymentSpec, deploy
+    from repro.lm import TransformerParams, compile_lm
+    from repro.models import model as model_lib
+    from repro.serving.engine import Engine, Request
+
+    N_REQ, N_NEW, S, ROUNDS = 8, 16, 8, 3
+    cfg = qwen1p5_0p5b.reduced_serving()
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(0, cfg.vocab_size, size=S))
+               for _ in range(N_REQ)]
+
+    # batched prefill tokens/s on the mapped path
+    clm = compile_lm(TransformerParams(cfg, params))
+    toks = np.asarray(prompts, np.int32)
+    jax.block_until_ready(clm.prefill(toks))           # jit warmup
+    prefill_tps = 0.0
+    for _ in range(ROUNDS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(clm.prefill(toks))
+        prefill_tps = max(prefill_tps,
+                          toks.size / (time.perf_counter() - t0))
+
+    # decode-as-streaming tokens/s: mapped tenant through deploy()
+    def serve_lm(d):
+        for p in prompts:
+            assert d.submit_tokens("lm", p, max_new_tokens=N_NEW)
+        t0 = time.perf_counter()
+        d.run_until_drained()
+        return N_REQ * N_NEW / (time.perf_counter() - t0)
+
+    d = deploy(AppSpec("lm", cfg, params=params, cache_len=64,
+                       lanes_per_chip=2))
+    serve_lm(d)                                        # jit warmup
+    first = {u: t for u, t in d.generated_tokens("lm").items()}
+    decode_tps = max(serve_lm(d) for _ in range(ROUNDS))
+    d.close()
+
+    # dense oracle: the plain serving.Engine on identical config (ONE
+    # engine reused across rounds — its jitted prefill/decode are
+    # per-instance, so a fresh engine per round would time recompiles)
+    eng = Engine(cfg, params, slots=4, cache_len=64)
+    def serve_dense(base_uid):
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=base_uid + i, prompt=p,
+                               max_new_tokens=N_NEW))
+        t0 = time.perf_counter()
+        eng.run_until_drained()
+        return N_REQ * N_NEW / (time.perf_counter() - t0)
+
+    serve_dense(0)                                     # jit warmup
+    oracle_tps = max(serve_dense(100 * (r + 1))
+                     for r in range(ROUNDS))
+    by_uid = {st.request.uid: st.generated for st in eng.finished}
+    oracle = [by_uid[i] for i in range(N_REQ)]
+    parity = [first[u] for u in sorted(first)] == oracle
+
+    # co-resident duo: the deep sensor app next to the LM tenant
+    duo = deploy(DeploymentSpec(apps=(
+        AppSpec("deep", "deep", lanes_per_chip=2),
+        AppSpec("lm", cfg, params=params, cache_len=64,
+                lanes_per_chip=2),
+    )))
+    frames = [rng.uniform(0, 1, (8, 784)).astype(np.float32)
+              for _ in range(6)]
+    def serve_duo():
+        for p in prompts:
+            assert duo.submit_tokens("lm", p, max_new_tokens=N_NEW)
+        for f in frames:
+            assert duo.submit("deep", f)
+        t0 = time.perf_counter()
+        duo.run_until_drained()
+        return time.perf_counter() - t0
+    serve_duo()                                        # jit warmup
+    duo_s = min(serve_duo() for _ in range(ROUNDS))
+    s = duo.stats()
+    exact = (sum(a.items for a in s.apps.values()) == s.fleet.items
+             and sum(a.requests for a in s.apps.values())
+             == s.fleet.requests)
+    print(json.dumps({
+        "devices": len(jax.devices()),
+        "prompts": N_REQ, "new_tokens": N_NEW,
+        "prefill_tokens_per_s": prefill_tps,
+        "decode_tokens_per_s": decode_tps,
+        "oracle_tokens_per_s": oracle_tps,
+        "mapped_vs_oracle": decode_tps / oracle_tps,
+        "token_parity": bool(parity),
+        "duo_tokens_per_s": N_REQ * N_NEW / duo_s,
+        "duo_sensor_items_per_s":
+            sum(f.shape[0] for f in frames) / duo_s,
+        "stats_exact": bool(exact),
+    }))
+""")
+
+
+def _lm_serve() -> dict:
+    """The LM tenant (repro.lm): width-scaled qwen mapped onto the
+    fabric, decoding through the keyed scheduler. Gates: generated
+    tokens exactly match the dense serving.Engine, steady-state decode
+    throughput >= 0.5x the dense oracle (the mapped path re-evaluates
+    programmed tile grids per matmul — parity costs arithmetic), and
+    the sensor+LM duo keeps exact per-app stats."""
+    print("\n== lm_serve: qwen tenant on the fabric, decode-as-"
+          "streaming ==")
+    try:
+        out = simdev.run_simulated(_LM_SCRIPT, n_devices=2,
+                                   timeout=900)
+    except (OSError, subprocess.TimeoutExpired) as e:
+        print(f"  lm_serve subprocess failed: {e!r}")
+        return {"error": repr(e), "mapped_vs_oracle": 0.0}
+    if out.returncode != 0:
+        print(f"  lm_serve subprocess failed:\n{out.stderr[-2000:]}")
+        return {"error": out.stderr[-2000:], "mapped_vs_oracle": 0.0}
+    try:
+        res = simdev.last_json_line(out.stdout)
+    except (IndexError, ValueError) as e:
+        print(f"  lm_serve emitted no result: {e!r}")
+        return {"error": f"unparseable output: {out.stdout[-500:]!r}",
+                "mapped_vs_oracle": 0.0}
+    print(f"  prefill (mapped)  : {res['prefill_tokens_per_s']:8.0f} "
+          f"tokens/s")
+    print(f"  decode  (mapped)  : {res['decode_tokens_per_s']:8.0f} "
+          f"tokens/s served")
+    print(f"  decode  (dense)   : {res['oracle_tokens_per_s']:8.0f} "
+          f"tokens/s ({res['mapped_vs_oracle']:.2f}x oracle; gate "
+          f">= 0.5; token parity: {res['token_parity']})")
+    print(f"  sensor+LM duo     : {res['duo_tokens_per_s']:8.0f} "
+          f"tokens/s + {res['duo_sensor_items_per_s']:.0f} items/s "
+          f"(per-app stats exact: {res['stats_exact']})")
+    return res
+
+
 def run() -> dict:
     tiles = _structural_report()
     errs = _correctness()
@@ -919,6 +1056,7 @@ def run() -> dict:
     vr = _variability_recal()
     obs_oh = _obs_overhead()
     autotune = _autotune()
+    lm = _lm_serve()
     max_err = max(errs.values())
     ok = max_err < 1e-5 and wc["speedup"] >= 5.0 and \
         wc["chip_stream"]["vs_oracle_rel"] <= 1e-5 and \
@@ -933,13 +1071,16 @@ def run() -> dict:
         obs_oh.get("overhead_ratio", 0.0) >= 0.9 and \
         bool(autotune.get("hetero_cheapest", False)) and \
         bool(autotune.get("slo_met", False)) and \
-        bool(autotune.get("stats_exact", False))
+        bool(autotune.get("stats_exact", False)) and \
+        lm.get("mapped_vs_oracle", 0.0) >= 0.5 and \
+        bool(lm.get("token_parity", False)) and \
+        bool(lm.get("stats_exact", False))
     return {"tiles": tiles, "kernel_err": max_err, "kernel_errs": errs,
             "wallclock": wc, "fleet_serve": fleet,
             "fleet_degraded": degraded,
             "deploy_serve": deploy, "variability_recal": vr,
             "obs_overhead": obs_oh, "autotune": autotune,
-            "pass": bool(ok)}
+            "lm_serve": lm, "pass": bool(ok)}
 
 
 def write_bench_json(result: dict,

@@ -45,4 +45,7 @@ python -m repro.variability --selftest
 echo "== repro.obs --selftest =="
 python -m repro.obs --selftest
 
+echo "== repro.lm --selftest =="
+python -m repro.lm --selftest
+
 echo "smoke: ALL PASS"

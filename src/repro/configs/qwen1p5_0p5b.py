@@ -33,3 +33,13 @@ def reduced() -> ModelConfig:
         vocab_size=512,
         grad_accum=1,
     )
+
+
+def reduced_serving() -> ModelConfig:
+    """The width-scaled config as an LM fabric tenant
+    (``repro.lm.compile_lm`` / ``AppSpec(network=...)``): float32 host
+    glue so the mapped tile-grid path matches the dense forward at
+    rel ≤ 1e-6 (compile_lm would force it anyway; naming it here keeps
+    the dense Engine oracle in tests on the identical config)."""
+    return reduced().replace(name="qwen-lm-tenant",
+                             compute_dtype="float32")

@@ -74,6 +74,14 @@ def _resolve_network(app: AppSpec):
     return net, app.params, dict(items_per_second=app.items_per_second)
 
 
+def _is_lm_network(net) -> bool:
+    """LM tenants declare themselves by shape: a transformer
+    ``ModelConfig`` (``family``/``num_layers``) instead of an MLP
+    spec/tuple — the same duck-typing ``compile_chip`` uses to point
+    misrouted configs at ``repro.lm.compile_lm``."""
+    return hasattr(net, "family") and hasattr(net, "num_layers")
+
+
 @dataclasses.dataclass
 class _Member:
     """One deployed tenant: its spec, compile, and fleet placement
@@ -124,6 +132,9 @@ class Deployment:
         self._monitors: Dict[str, Any] = {}
         self._recals: Dict[str, Any] = {}
         for app in spec.apps:
+            if _is_lm_network(app.network):
+                self._members[app.name] = self._deploy_lm(app, spec)
+                continue
             networks, params, kw = _resolve_network(app)
             app_mesh = self._submeshes.get(app.system, self.mesh)
             app_chips = app_mesh.devices.size
@@ -190,6 +201,63 @@ class Deployment:
                               queue_limits=limits,
                               use_kernel=spec.use_kernel)
 
+    # ---------------- LM tenants (repro.lm) ------------------------ #
+    def _deploy_lm(self, app: AppSpec, spec: DeploymentSpec) -> _Member:
+        """Compile and place one language-model tenant: the
+        transformer's per-layer linears map through
+        :func:`repro.lm.compile_lm` onto programmed tile plans, and an
+        :class:`repro.lm.LMMember` joins the shared router next to the
+        sensor members — ``items_per_second`` reads as tokens/second
+        and ``lanes_per_chip`` as concurrent decode sequences."""
+        from repro import lm as lm_lib
+
+        if self.is_distributed:
+            raise ValueError(
+                f"app {app.name!r}: LM tenants are single-process — "
+                "decode is one batched host-graph jit over the lanes, "
+                "not an SPMD collective")
+        if app.analytic:
+            raise ValueError(
+                f"app {app.name!r}: analytic=True does not apply to "
+                "an LM tenant — compile_lm(...).report() is the "
+                "sizing surface")
+        if app.noise is not None:
+            raise ValueError(
+                f"app {app.name!r}: noise models are not wired "
+                "through compile_lm yet (sensor tenants only)")
+        app_mesh = self._submeshes.get(app.system, self.mesh)
+        app_chips = app_mesh.devices.size
+        model = lm_lib.TransformerParams(app.network, app.params) \
+            if app.params is not None else app.network
+        clm = lm_lib.compile_lm(model, system=app.system,
+                                geometry=app.geom,
+                                tokens_per_second=app.items_per_second,
+                                seed=app.seed)
+        # same fleet-scope SLO validation as the analytic sensor path:
+        # compile_lm defers, the one diagnostic carries both levels
+        validate_stream_rate(
+            app.items_per_second, clm.chip.replication * app_chips,
+            clm.chip.route, spec.strict_rate, context="deploy",
+            fabric=(f"fleet replica(s) ({app_chips} chip(s) x "
+                    f"{clm.chip.replication} replica(s))"),
+            remedy=("Add chips of this app's system, use a larger "
+                    "core geometry, or lower the app's tokens/second "
+                    "SLO."),
+            stacklevel=5, chip_replicas=clm.chip.replication)
+        member = lm_lib.LMMember(
+            clm, lanes=app.lanes_per_chip * app_chips,
+            cache_len=app.cache_len or lm_lib.DEFAULT_CACHE_LEN,
+            n_chips=app_chips)
+        return _Member(app, clm.chip, member, None, clm.params)
+
+    def _lm_member(self, app: str) -> _Member:
+        m = self._streaming_member(app)
+        if not getattr(m.sharded, "is_lm", False):
+            raise TypeError(
+                f"app {app!r} is a sensor tenant — submit_tokens is "
+                "the LM verb; use submit/stream")
+        return m
+
     # ---------------- introspection -------------------------------- #
     @property
     def apps(self) -> List[str]:
@@ -244,6 +312,11 @@ class Deployment:
         arithmetic to the legacy ``shard_chip(...).stream`` path (the
         member IS a ShardedChip), hence rel 0.0 against it."""
         m = self._streaming_member(app)
+        if getattr(m.sharded, "is_lm", False):
+            raise TypeError(
+                f"app {app!r} is an LM tenant — one-shot stream is a "
+                "sensor verb; use submit_tokens (or CompiledLM."
+                "prefill/decode directly)")
         uk = self.spec.use_kernel if use_kernel is None else use_kernel
         if self.is_distributed:
             return m.sharded.stream_local(x, use_kernel=uk)
@@ -252,8 +325,42 @@ class Deployment:
     def submit(self, app: str, items) -> bool:
         """Queue one item-stream request for ``app`` on the shared
         router; False = that app's admission queue is full."""
-        self._streaming_member(app)
+        m = self._streaming_member(app)
+        if getattr(m.sharded, "is_lm", False):
+            raise TypeError(
+                f"app {app!r} is an LM tenant — its requests carry a "
+                "token prompt, not an item array; use submit_tokens")
         return self._live_router().submit_app(app, items) is not None
+
+    def submit_tokens(self, app: str, prompt,
+                      max_new_tokens: int = 16) -> bool:
+        """Queue one decode request for LM tenant ``app``: prefill the
+        prompt on admission, then stream ``max_new_tokens`` greedy
+        tokens — one token per engine step per lane, through the same
+        keyed scheduler (and the same per-app accounting) as the
+        sensor items. False = the app's admission queue is full."""
+        from repro.lm import lm_request
+
+        m = self._lm_member(app)
+        prompt = tuple(int(t) for t in prompt)
+        budget = m.sharded.cache_len
+        if len(prompt) + max_new_tokens > budget:
+            raise ValueError(
+                f"submit_tokens: prompt ({len(prompt)}) + "
+                f"max_new_tokens ({max_new_tokens}) exceeds the "
+                f"app's KV cache_len ({budget}) — raise "
+                "AppSpec.cache_len or shorten the request")
+        req = lm_request(prompt, max_new_tokens)
+        return self._live_router().submit_app(app, req) is not None
+
+    def generated_tokens(self, app: str) -> Dict[int, List[int]]:
+        """``{request uid: generated token ids}`` for every FINISHED
+        request of LM tenant ``app``."""
+        from repro.lm import tokens_from_state
+
+        self._lm_member(app)
+        return {st.request.uid: tokens_from_state(st)
+                for st in self._live_router()._finished_for(app)}
 
     def step(self) -> int:
         return self._live_router().step()
@@ -285,7 +392,12 @@ class Deployment:
         :meth:`stats` / :meth:`variability_report`. Returns the
         monitor. The chip is resolved per probe, so live reprograms
         are always scored against current state."""
-        self._streaming_member(app)
+        m = self._streaming_member(app)
+        if getattr(m.sharded, "is_lm", False):
+            raise NotImplementedError(
+                f"app {app!r} is an LM tenant — accuracy monitors "
+                "score an MLP canary batch against the programmed "
+                "chip; LM quality tracking is future work")
         from repro.variability.monitor import AccuracyMonitor
 
         monitor = AccuracyMonitor(lambda: self._member(app).chip,
@@ -444,7 +556,15 @@ class Deployment:
             raise ValueError(f"resize: mesh has no 'chip' axis "
                              f"(axes: {mesh.axis_names})")
         for m in self._members.values():
-            if m.sharded is not None:
+            if m.sharded is None:
+                continue
+            if getattr(m.sharded, "is_lm", False):
+                # fresh per-lane KV cache FIRST: the router's requeued
+                # lanes re-admit through on_admit, which re-prefills
+                # each continuation into it
+                m.sharded.resize(
+                    lanes=m.spec.lanes_per_chip * mesh.devices.size)
+            else:
                 m.sharded.resize(mesh=mesh)
         self.mesh = mesh
         self.n_chips = mesh.devices.size
@@ -465,6 +585,11 @@ class Deployment:
         program-once, made a live operation. Call between engine
         steps."""
         m = self._streaming_member(app)
+        if getattr(m.sharded, "is_lm", False):
+            raise NotImplementedError(
+                f"app {app!r} is an LM tenant — live reprogram is a "
+                "sensor-tenant verb for now; recompile via "
+                "repro.lm.compile_lm and redeploy")
         # weight_bits/device/r_seg ride on the chip itself
         # (CompiledChip.program_kw) — the swap re-encodes exactly the
         # way the compile did

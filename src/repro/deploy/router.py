@@ -99,15 +99,50 @@ class MultiAppRouter(TimedStepMixin, KeyedItemStreamScheduler):
                              use_kernel=self.use_kernel,
                              local=self._local_stream)
 
+    # ---------------- member lane-lifecycle hooks ------------------- #
+    # Members that bind per-lane device state to the lane lifecycle
+    # (the LM tenant's KV-cache slots: ``repro.lm.LMMember``) expose
+    # ``on_admit(lane, state)`` / ``on_release(lane)``; lanes are
+    # member-relative (slot minus the app's block base). Sensor members
+    # expose neither and pay one getattr per lifecycle event.
+    def _notify_admit(self, slot: int, st) -> None:
+        key = self._slot_key[slot]
+        hook = getattr(self.members[key], "on_admit", None)
+        if hook is not None:
+            hook(slot - self._base[key], st)
+
+    def _begin(self, req, slot):
+        st = super()._begin(req, slot)
+        self._notify_admit(slot, st)
+        return st
+
+    def _resume(self, st, slot):
+        st = super()._resume(st, slot)
+        self._notify_admit(slot, st)
+        return st
+
+    def _release(self, st) -> None:
+        key = self._slot_key[st.slot]
+        hook = getattr(self.members[key], "on_release", None)
+        if hook is not None:
+            hook(st.slot - self._base[key])
+        super()._release(st)
+
     # ---------------- submission ----------------------------------- #
     def submit_app(self, app: str, items) -> Optional[ItemRequest]:
         """Wrap ``items`` into a request tagged for ``app`` and submit
         it; returns the request, or None if the app's admission queue
-        refused it (backpressure)."""
+        refused it (backpressure). A pre-built :class:`ItemRequest`
+        (e.g. an LM decode request from :func:`repro.lm.lm_request`)
+        is submitted as-is, with its uid/key stamped here."""
         if app not in self.members:
             raise ValueError(f"unknown app {app!r} (deployed: "
                              f"{sorted(self.members)})")
-        req = ItemRequest(uid=self._uid, items=items, key=app)
+        if isinstance(items, ItemRequest):
+            req = items
+            req.uid, req.key = self._uid, app
+        else:
+            req = ItemRequest(uid=self._uid, items=items, key=app)
         self._uid += 1
         return req if self.submit(req) else None
 

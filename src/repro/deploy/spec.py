@@ -47,7 +47,14 @@ class AppSpec:
         analytic-only (report works, stream raises);
       * an :class:`repro.core.MLPSpec` — pass ``params`` to stream,
         omit for analytic-only;
-      * a :class:`repro.core.ProgrammedMLP` — already-programmed state.
+      * a :class:`repro.core.ProgrammedMLP` — already-programmed state;
+      * a :class:`repro.configs.ModelConfig` — a language-model tenant:
+        the transformer's per-layer linears are mapped through
+        :func:`repro.lm.compile_lm` (``params`` optionally carries
+        trained weights, ``seed`` otherwise), decode streams through
+        the shared router one token per lane per step, and
+        ``items_per_second`` reads as tokens/second. ``cache_len``
+        sizes the per-lane KV ring (LM tenants only).
 
     ``system`` accepts any alias (``"memristor"``/``"1t1m"`` /
     ``"digital"``/``"sram"``); ``items_per_second`` is the tenant's SLO
@@ -83,6 +90,7 @@ class AppSpec:
     analytic: bool = False
     noise: Any = None
     geom: Optional[Tuple[int, int]] = None
+    cache_len: Optional[int] = None     # LM tenants: per-lane KV ring
 
     def __post_init__(self):
         if not self.name or not isinstance(self.name, str):
@@ -105,6 +113,13 @@ class AppSpec:
             raise ValueError(f"AppSpec {self.name!r}: analytic=True "
                              "is report-only — params would never be "
                              "programmed")
+        if self.cache_len is not None and (
+                not isinstance(self.cache_len, int)
+                or isinstance(self.cache_len, bool)
+                or self.cache_len < 2):
+            raise ValueError(
+                f"AppSpec {self.name!r}: cache_len must be an int "
+                f">= 2 or None (got {self.cache_len!r})")
         # normalize eagerly so a bad alias fails at spec build, not
         # mid-deploy
         object.__setattr__(self, "system",
@@ -182,7 +197,8 @@ def single_app(network, params=None, *, name: str = "app",
     compile→shard→route path as one call)."""
     app_kw = {k: kw.pop(k) for k in
               ("items_per_second", "lanes_per_chip", "queue_limit",
-               "seed", "weight_bits", "analytic", "noise", "geom")
+               "seed", "weight_bits", "analytic", "noise", "geom",
+               "cache_len")
               if k in kw}
     return DeploymentSpec(
         apps=(AppSpec(name, network, params=params, system=system,

@@ -1,0 +1,177 @@
+"""CI smoke entry point for the LM tenant stack.
+
+``PYTHONPATH=src python -m repro.lm --selftest`` — single process,
+simulated host devices (default 2; ``--devices N``; the flag is pinned
+into XLA_FLAGS before jax initializes, which is why this package's
+imports are lazy). What it pins:
+
+  * ``compile_lm`` on the width-scaled qwen config matches the dense
+    ``models/transformer.py`` forward at rel ≤ 1e-6 — prefill logits,
+    prefill cache and a per-slot decode step — on BOTH systems
+    (memristor and digital tile geometries);
+  * a ``deploy()`` duo — the ``deep`` sensor app and the LM tenant
+    side-by-side on the one shared ``"chip"`` mesh — serves mixed
+    traffic through the one keyed router, and every generated token
+    stream equals the dense ``serving.Engine``'s output exactly;
+  * the per-app stats rows sum EXACTLY to the fleet roll-up, and the
+    deployment report prices the LM tenant's Tables II–VI row next to
+    the sensor row;
+  * ``repro.obs`` telemetry: the ``lm.tokens`` counter equals the LM
+    app's emitted item count exactly, and the per-token
+    ``lm.decode_latency_s`` histogram is populated.
+
+Exit 0 iff every check passes.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def selftest(verbose: bool = True) -> bool:
+    import jax
+    import numpy as np
+
+    from repro import obs
+    from repro.configs import qwen1p5_0p5b
+    from repro.deploy import AppSpec, DeploymentSpec, deploy
+    from repro.lm import compile_lm
+    from repro.models import model as model_lib
+    from repro.serving.engine import Engine, Request
+
+    ok = True
+
+    def check(name, cond, detail=""):
+        nonlocal ok
+        ok = ok and bool(cond)
+        if verbose:
+            print(f"  [{'ok' if cond else 'FAIL'}] {name}"
+                  f"{'  (' + detail + ')' if detail else ''}")
+
+    def rel(a, b):
+        a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+        return float(np.max(np.abs(a - b)) /
+                     max(np.max(np.abs(b)), 1e-12))
+
+    n_dev = len(jax.devices())
+    check("simulated fleet devices", n_dev >= 2, f"{n_dev} devices")
+
+    tel = obs.configure(trace=False)
+
+    # -- mapped forward == dense forward, both systems --------------- #
+    cfg = qwen1p5_0p5b.reduced().replace(compute_dtype="float32",
+                                         decode_per_slot=True)
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, size=(2, 9))
+    d_logits, d_cache = jax.jit(
+        lambda p, b: model_lib.prefill(cfg, p, b))(
+            params, {"tokens": toks})
+    for system in ("memristor", "digital"):
+        clm = compile_lm(cfg, system=system)
+        m_logits, m_cache = clm.prefill(toks)
+        r = rel(m_logits, d_logits)
+        check(f"prefill logits match dense ({system})", r <= 1e-6,
+              f"rel {r:.1e}")
+        r = max(rel(a, b) for a, b in zip(
+            jax.tree.leaves(m_cache), jax.tree.leaves(d_cache)))
+        check(f"prefill cache matches dense ({system})", r <= 1e-6,
+              f"rel {r:.1e}")
+        step = np.asarray([[3], [5]], np.int32)
+        pos = np.asarray([9, 9], np.int32)
+        dl, _ = jax.jit(lambda p, c, t, q: model_lib.decode_step(
+            cfg, p, c, t, q))(params, d_cache, step, pos)
+        ml, _ = clm.decode(m_cache, step, pos)
+        r = rel(ml, dl)
+        check(f"decode logits match dense ({system})", r <= 1e-6,
+              f"rel {r:.1e}")
+    check("lm.compiles counted",
+          tel.metrics.snapshot()["counters"].get("lm.compiles") == 2)
+
+    # -- sensor + LM duo on one shared mesh -------------------------- #
+    dep = deploy(DeploymentSpec(apps=(
+        AppSpec("sensor", "deep", items_per_second=100.0,
+                lanes_per_chip=2),
+        AppSpec("lm", cfg, params=params, items_per_second=50.0,
+                lanes_per_chip=2, cache_len=64),
+    )))
+    check("duo co-resident on the fleet",
+          dep.n_chips == n_dev and dep.apps == ["sensor", "lm"])
+
+    prompts = [list(rng.integers(0, cfg.vocab_size, size=n))
+               for n in (5, 3, 7, 4, 6)]
+    for p in prompts:
+        check("submit_tokens admits",
+              dep.submit_tokens("lm", p, max_new_tokens=6))
+    sensor_batches = [rng.uniform(0, 1, (3 + i, 784)).astype(np.float32)
+                      for i in range(3)]
+    for b in sensor_batches:
+        dep.submit("sensor", b)
+    dep.run_until_drained()
+    got = dep.generated_tokens("lm")
+    check("every LM request finished", len(got) == len(prompts))
+
+    eng = Engine(cfg, params, slots=len(prompts), cache_len=64)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=6))
+    eng.run_until_drained()
+    oracle = [st.generated for st in
+              sorted(eng.finished, key=lambda st: st.request.uid)]
+    mapped = [got[uid] for uid in sorted(got)]
+    check("generated tokens == dense serving.Engine, per request",
+          mapped == oracle)
+
+    stats = dep.stats()
+    roll = {f: sum(getattr(s, f) for s in stats.apps.values())
+            for f in ("requests", "items", "rejected", "lanes")}
+    check("per-app stats roll up EXACTLY to the fleet row",
+          all(roll[f] == getattr(stats.fleet, f) for f in roll) and
+          stats.apps["lm"].items == 6 * len(prompts) and
+          stats.apps["sensor"].items ==
+          sum(b.shape[0] for b in sensor_batches), str(roll))
+
+    rep = dep.report()
+    check("LM tenant prices a Tables II-VI row next to the sensor row",
+          set(rep.apps) == {"sensor", "lm"} and
+          rep.apps["lm"].area_mm2 > 0 and
+          abs(rep.area_mm2 - sum(f.area_mm2
+                                 for f in rep.apps.values())) < 1e-9)
+
+    # -- telemetry: exact token accounting --------------------------- #
+    snap = dep.metrics()
+    check("lm.tokens counter == LM items emitted",
+          snap["counters"].get("lm.tokens") == stats.apps["lm"].items,
+          f"counter {snap['counters'].get('lm.tokens')} vs items "
+          f"{stats.apps['lm'].items}")
+    hist = snap["histograms"].get("lm.decode_latency_s")
+    check("per-token decode-latency histogram populated",
+          hist is not None and hist["count"] >= 1 and hist["p50"] > 0)
+    dep.close()
+
+    if verbose:
+        print(f"selftest: {'PASS' if ok else 'FAIL'}")
+    return ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.lm")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run the LM-tenant smoke check")
+    ap.add_argument("--devices", type=int, default=2,
+                    help="simulated host devices (default 2; ignored "
+                         "when jax is already initialized or XLA_FLAGS "
+                         "is set)")
+    args = ap.parse_args(argv)
+    if not args.selftest:
+        ap.print_help()
+        return 2
+    if "jax" not in sys.modules and "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_"
+                                   f"count={args.devices}")
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    return 0 if selftest() else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,308 @@
+"""compile_lm: transformer blocks on the crossbar fabric.
+
+The paper's companion work (Hasan & Taha, arXiv:1603.07400) argues the
+streaming multicore substrate generalizes from small classifiers to
+deep-network compute. This module is that claim for language models:
+every matmul of a dense transformer block — the seven per-layer
+linears wq/wk/wv/wo (attention) and w1/w3/w2 (SwiGLU FFN) — is
+programmed onto tile grids through the SAME ``program_layer`` →
+``StreamLayer`` pipeline that maps the sensor MLPs, while everything a
+crossbar cannot express (rms-norm, rotary embedding, softmax
+attention, residuals, KV-cache surgery) stays jitted host-graph glue
+from ``models/transformer.py`` via its ``project``/``mlp_fn`` hooks.
+
+Exactness discipline
+--------------------
+LM linears are programmed in EXACT mode (``quantize=False``): the
+differential-pair encoding with the per-tile-column fold scale is
+value-preserving — ``(gp - gn) · scale`` recovers the weight up to
+float rounding — and the Fig. 11 combiner neurons' all-ones encodings
+decode to exactly 1.0 even quantized (conductance endpoints are exact
+levels). One functional image therefore serves BOTH systems: memristor
+and digital differ in tile geometry (so tiling, combiner-tree depth
+and the whole cost model differ) but share the exact encoding, which
+is what lets ``CompiledLM.prefill``/``decode`` match the dense
+``models/transformer.py`` forward at rel ≤ 1e-6. (The int8 +
+DAC-clipped ``program_digital`` path cannot hit that bound; 8-bit LM
+inference on the digital image is future work, gated on a QAT story.)
+Host glue is forced to float32 compute for the same reason — the
+mapped tile-grid partials accumulate in f32, and bf16 glue would
+dominate the comparison.
+
+Cost accounting
+---------------
+The per-layer linears double as ``(1, (d_in, d_out))`` net tuples
+through the ordinary ``map_networks`` split→pack→place→route pass
+(one analytic :class:`repro.chip.CompiledChip`), so an LM tenant
+prices through ``fabric_cost``/``deployment_report`` exactly like a
+sensor app — Tables II–VI composition over mixed sensor+LM fabrics.
+``tokens_per_second`` plays the role of the sensor SLO: it sizes the
+replica fan-out and is validated against the routed TDM schedule at
+deploy scope.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.chip.compile import (CompiledChip, StreamLayer, _apply_stream_layer,
+                                _ChipStatic, _default_geom, _layer_plan,
+                                _static, compile_chip)
+from repro.core.crossbar_layer import program_layer
+from repro.core.device import DEFAULT_DEVICE, DeviceModel
+from repro.core.neural_core import CoreGeometry
+from repro.core.systems import normalize_system
+from repro.models import model as model_lib
+from repro.models import transformer as tf
+from repro.models.layers import act_fn, rms_norm
+from repro.obs.core import current as _obs_current
+
+# the crossbar-mappable linears of one dense block, in dataflow order
+LM_LINEARS: Tuple[str, ...] = ("wq", "wk", "wv", "wo", "w1", "w3", "w2")
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerParams:
+    """A model config plus its dense parameter pytree — what a trainer
+    (or a checkpoint loader) hands :func:`compile_lm` instead of a
+    fresh seeded init."""
+    cfg: Any
+    params: Any
+
+
+def _block_linears(cfg, p_l) -> Dict[str, jax.Array]:
+    """The seven (d_in, d_out) weight matrices of one block, flattened
+    out of the attention head layout. QKV biases are NOT folded in —
+    ``attn_apply`` adds them in the host glue, so the programmed tiles
+    stay pure matmuls (a crossbar bias row would re-quantize them)."""
+    a = p_l["attn"]
+    d, H = cfg.d_model, cfg.num_heads
+    KH, dh = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "wq": a["wq"].reshape(d, H * dh),
+        "wk": a["wk"].reshape(d, KH * dh),
+        "wv": a["wv"].reshape(d, KH * dh),
+        "wo": a["wo"].reshape(H * dh, d),
+        "w1": p_l["mlp"]["w1"],
+        "w3": p_l["mlp"]["w3"],
+        "w2": p_l["mlp"]["w2"],
+    }
+
+
+# --------------------------------------------------------------------- #
+# the mapped forward (host glue + tile-grid projections)
+# --------------------------------------------------------------------- #
+def _projector(layer_plans: Dict[str, StreamLayer], use_kernel: bool):
+    def project(name: str, x: jax.Array) -> jax.Array:
+        B, S, d_in = x.shape
+        out = _apply_stream_layer(layer_plans[name],
+                                  x.reshape(B * S, d_in), use_kernel)
+        return out.reshape(B, S, -1)
+    return project
+
+
+def _mlp_fn(layer_plans: Dict[str, StreamLayer], cfg, use_kernel: bool):
+    def mlp(p_mlp, x: jax.Array) -> jax.Array:
+        B, S, d = x.shape
+        x2 = x.reshape(B * S, d)
+        h = _apply_stream_layer(layer_plans["w1"], x2, use_kernel)
+        g = _apply_stream_layer(layer_plans["w3"], x2, use_kernel)
+        h = act_fn(cfg.act)(h) * g
+        out = _apply_stream_layer(layer_plans["w2"], h, use_kernel)
+        return out.reshape(B, S, -1)
+    return mlp
+
+
+def _lm_forward(clm: "CompiledLM", batch, mode: str, cache,
+                use_kernel: bool):
+    """``model.forward`` with the scan over layers unrolled into a
+    python loop (each layer owns a distinct programmed tile image, so
+    there is no stacked-parameter scan body to share) and the seven
+    matmuls routed through ``_apply_stream_layer``. Positions, cache
+    layout and everything else mirror the dense path exactly — the
+    re-stacked cache is bit-compatible with the dense engine's, which
+    is what lets ``serving.kvcache`` slot surgery work unchanged."""
+    cfg, params = clm.cfg, clm.params
+    dtype = jnp.dtype(cfg.compute_dtype)
+    h = model_lib._embed_in(cfg, params, batch, dtype)
+    B, S = h.shape[0], h.shape[1]
+    if mode == "decode":
+        pos = batch["pos"]
+        if cfg.decode_per_slot:
+            positions = pos.reshape(B, 1).astype(jnp.int32)
+        else:
+            positions = jnp.broadcast_to(pos[None, None],
+                                         (B, S)).astype(jnp.int32)
+    else:
+        positions = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    windows = tf._layer_windows(cfg)
+    caches = []
+    for layer in range(cfg.num_layers):
+        p_l = jax.tree.map(lambda x, _l=layer: x[_l], params["stack"])
+        c_l = None if cache is None else \
+            jax.tree.map(lambda x, _l=layer: x[_l], cache)
+        h, c_new, _ = tf._block_apply(
+            p_l, cfg, h, positions=positions, mode=mode, cache=c_l,
+            window=windows[layer], use_moe=False,
+            project=_projector(clm.plans[layer], use_kernel),
+            mlp_fn=_mlp_fn(clm.plans[layer], cfg, use_kernel))
+        caches.append(c_new)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    new_cache = None
+    if caches and caches[0] is not None:
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    return h, new_cache
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def _prefill(clm: "CompiledLM", tokens: jax.Array,
+             use_kernel: bool = False):
+    h, cache = _lm_forward(clm, {"tokens": tokens}, "prefill", None,
+                           use_kernel)
+    logits = model_lib._head(clm.cfg, clm.params, h[:, -1:, :])[:, 0, :]
+    return logits, cache
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def _decode(clm: "CompiledLM", cache, tokens: jax.Array,
+            pos: jax.Array, use_kernel: bool = False):
+    h, new_cache = _lm_forward(clm, {"tokens": tokens, "pos": pos},
+                               "decode", cache, use_kernel)
+    logits = model_lib._head(clm.cfg, clm.params, h)[:, 0, :]
+    return logits, new_cache
+
+
+# --------------------------------------------------------------------- #
+# the compiled LM object
+# --------------------------------------------------------------------- #
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CompiledLM:
+    """A transformer mapped onto the fabric (see module docstring).
+
+    A jit-able pytree: the dense parameter tree (host glue: embeddings,
+    norms, biases, LM head) and the per-layer programmed tile plans are
+    the array leaves; the config, geometry and the analytic cost chip
+    are static aux. ``prefill``/``decode`` mirror
+    ``models.model.prefill``/``decode_step`` exactly — same signatures,
+    same cache pytree — with the block matmuls running the mapped
+    tile-grid path. ``decode_per_slot`` is always on (a CompiledLM
+    exists to serve; lockstep callers pass per-lane positions)."""
+    params: Any
+    plans: Tuple[Dict[str, StreamLayer], ...]
+    cfg: Any = _static()
+    system: str = _static()
+    geom: CoreGeometry = _static()
+    tokens_per_second: float = _static()
+    chip_static: _ChipStatic = _static()
+
+    @property
+    def chip(self) -> CompiledChip:
+        """The analytic cost compile (map→route over the per-layer
+        linears) — what ``deployment_report`` prices the tenant by."""
+        return self.chip_static.value
+
+    @property
+    def d_model(self) -> int:
+        return self.cfg.d_model
+
+    def init_cache(self, batch: int, cache_len: int,
+                   dtype=jnp.bfloat16):
+        return model_lib.init_cache(self.cfg, batch, cache_len, dtype)
+
+    def prefill(self, tokens, *, use_kernel: bool = False):
+        """tokens (B, S) int → (last-token logits (B, vocab), cache)."""
+        toks = jnp.asarray(tokens, jnp.int32)
+        if toks.ndim == 1:
+            toks = toks[None, :]
+        return _prefill(self, toks, use_kernel)
+
+    def decode(self, cache, tokens, pos, *, use_kernel: bool = False):
+        """tokens (B, 1) int, pos (B,) per-slot positions →
+        (logits (B, vocab), new_cache)."""
+        return _decode(self, cache, jnp.asarray(tokens, jnp.int32),
+                       jnp.asarray(pos, jnp.int32), use_kernel)
+
+    def report(self):
+        return self.chip.report()
+
+
+# --------------------------------------------------------------------- #
+# the compile
+# --------------------------------------------------------------------- #
+def compile_lm(model, *, system: str = "memristor", geometry=None,
+               tokens_per_second: float = 0.0, seed: int = 0,
+               device: DeviceModel = DEFAULT_DEVICE) -> CompiledLM:
+    """Map a dense transformer onto the fabric.
+
+    ``model`` is a :class:`repro.configs.ModelConfig` (parameters are
+    seeded deterministically from ``seed``) or a
+    :class:`TransformerParams` carrying trained weights. ``geometry``
+    pins the tile geometry as a ``(rows, cols)`` pair or
+    :class:`CoreGeometry` (None → the system's paper optimum);
+    ``tokens_per_second`` is the tenant SLO the analytic cost chip is
+    replica-sized against (validated at deploy scope, like every other
+    tenant's rate).
+
+    The config's compute dtype is forced to float32 and
+    ``decode_per_slot`` to True — the serving contract (see
+    :class:`CompiledLM`). Non-dense families raise: MoE expert routing
+    and SSM scans have no static per-layer matmul set to program.
+    """
+    if isinstance(model, TransformerParams):
+        cfg, params = model.cfg, model.params
+    elif hasattr(model, "family") and hasattr(model, "num_layers"):
+        cfg, params = model, None
+    else:
+        raise TypeError(
+            f"compile_lm takes a ModelConfig or TransformerParams "
+            f"(got {type(model).__name__}); MLPs/net tuples belong to "
+            f"repro.chip.compile_chip")
+    if cfg.family != "dense":
+        raise NotImplementedError(
+            f"compile_lm maps dense transformer blocks only; family "
+            f"{cfg.family!r} (moe/ssm/hybrid expert routing and state "
+            f"scans have no static per-layer matmul set to program)")
+    system = normalize_system(system, context="compile_lm")
+    cfg = cfg.replace(compute_dtype="float32", decode_per_slot=True)
+    if params is None:
+        params = model_lib.init_params(cfg, jax.random.PRNGKey(seed))
+    if geometry is None:
+        geom = _default_geom(system)
+    elif isinstance(geometry, CoreGeometry):
+        geom = geometry
+    else:
+        geom = CoreGeometry(*geometry)
+
+    plans = []
+    nets = []
+    for layer in range(cfg.num_layers):
+        p_l = jax.tree.map(lambda x, _l=layer: x[_l], params["stack"])
+        linears = _block_linears(cfg, p_l)
+        layer_plans = {}
+        for name in LM_LINEARS:
+            w = linears[name].astype(jnp.float32)
+            lp = program_layer(w, geom=geom, device=device,
+                               quantize=False)
+            layer_plans[name] = _layer_plan(
+                lp, jnp.zeros((w.shape[1],), jnp.float32), "linear",
+                device)
+            nets.append((1, (int(w.shape[0]), int(w.shape[1]))))
+        plans.append(layer_plans)
+
+    chip = compile_chip(tuple(nets), system=system, geom=geom,
+                        items_per_second=tokens_per_second,
+                        validate_rate=False)
+    clm = CompiledLM(params=params, plans=tuple(plans), cfg=cfg,
+                     system=system, geom=geom,
+                     tokens_per_second=float(tokens_per_second),
+                     chip_static=_ChipStatic(chip))
+    tel = _obs_current()
+    if tel.active:
+        tel.metrics.counter("lm.compiles").inc()
+    return clm

@@ -180,12 +180,20 @@ def _store_prefill_scale(cache_len: int, s: jax.Array) -> jax.Array:
 # --------------------------------------------------------------------- #
 def attn_apply(p: Dict, cfg, x: jax.Array, *, positions: jax.Array,
                mode: str, cache: Optional[Dict] = None,
-               window=None) -> Tuple[jax.Array, Optional[Dict]]:
+               window=None, project=None) -> Tuple[jax.Array,
+                                                   Optional[Dict]]:
     """x: (B, S, d). positions: (B, S) absolute token positions.
 
     mode: "train" (no cache), "prefill" (build cache), "decode" (S == 1,
     read+update cache; ``per_slot`` lets every batch lane hold its own
     position — the continuous-batching serving path).
+
+    project: optional ``(name, x (B, S, d_in)) -> (B, S, d_out)``
+    override for the four linear projections ("wq"/"wk"/"wv"/"wo");
+    ``repro.lm`` routes them through crossbar-mapped tile grids while
+    rope, softmax, and cache surgery below stay host-graph glue. QKV
+    biases are still added here, so a projection backend must not fold
+    them in.
     Returns (out (B, S, d), new_cache)."""
     dt = x.dtype
     B, S, _ = x.shape
@@ -194,9 +202,14 @@ def attn_apply(p: Dict, cfg, x: jax.Array, *, positions: jax.Array,
     G = H // KH_eff
     scale = cfg.attn_scale if cfg.attn_scale else dh ** -0.5
 
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
-    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
-    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if project is None:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    else:
+        q = project("wq", x).reshape(B, S, H, dh)
+        k = project("wk", x).reshape(B, S, KH, dh)
+        v = project("wv", x).reshape(B, S, KH, dh)
     if cfg.qkv_bias:
         q = q + p["bq"].astype(dt)
         k = k + p["bk"].astype(dt)
@@ -222,7 +235,11 @@ def attn_apply(p: Dict, cfg, x: jax.Array, *, positions: jax.Array,
             kq, ks_new = _quant_kv(k)
             vq, vs_new = _quant_kv(v)
         else:
-            kq, vq, ks_new, vs_new = k, v, None, None
+            # explicit downcast into the cache dtype — jax scatter is
+            # deprecating the implicit f32→bf16 cast (FutureWarning)
+            kq = k.astype(cache["k"].dtype)
+            vq = v.astype(cache["v"].dtype)
+            ks_new, vs_new = None, None
         if cfg.decode_per_slot:
             # continuous batching: every slot decodes at its own position
             pos_b = positions[:, 0]                      # (B,)
@@ -277,5 +294,8 @@ def attn_apply(p: Dict, cfg, x: jax.Array, *, positions: jax.Array,
                              "v": _store_prefill(T, v)}
 
     out = out.reshape(B, S, H, dh)
-    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    if project is None:
+        out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    else:
+        out = project("wo", out.reshape(B, S, H * dh))
     return out, new_cache

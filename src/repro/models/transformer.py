@@ -97,11 +97,17 @@ def _block_specs(cfg, use_moe: bool):
     return s
 
 
-def _block_apply(p, cfg, h, *, positions, mode, cache, window, use_moe):
+def _block_apply(p, cfg, h, *, positions, mode, cache, window, use_moe,
+                 project=None, mlp_fn=None):
+    """project/mlp_fn: optional linear-projection overrides (see
+    ``attn.attn_apply``); ``repro.lm`` substitutes crossbar-mapped tile
+    grids for the block's seven matmuls while norms, residuals, rope,
+    softmax, and cache surgery stay in this host graph."""
     a_in = rms_norm(h, p["attn_norm"], cfg.norm_eps)
     a_out, new_cache = attn.attn_apply(p["attn"], cfg, a_in,
                                        positions=positions, mode=mode,
-                                       cache=cache, window=window)
+                                       cache=cache, window=window,
+                                       project=project)
     if cfg.post_block_norm:
         a_out = rms_norm(a_out, p["attn_post"], cfg.norm_eps)
     h = h + a_out
@@ -111,6 +117,8 @@ def _block_apply(p, cfg, h, *, positions, mode, cache, window, use_moe):
     aux = {}
     if use_moe:
         m_out, aux = moe_mod.moe_apply(p["mlp"], cfg, m_in)
+    elif mlp_fn is not None:
+        m_out = mlp_fn(p["mlp"], m_in)
     else:
         m_out = mlp_apply(p["mlp"], m_in, cfg.act, m_in.dtype)
     if cfg.post_block_norm:

@@ -1,0 +1,296 @@
+"""repro.lm — transformer-block mapping + decode-as-streaming.
+
+The exactness contract under test: a dense transformer's seven
+per-layer linears programmed onto tile grids (EXACT differential-pair
+encoding, ``quantize=False``) must reproduce the dense
+``models/transformer.py`` forward at rel ≤ 1e-6 on BOTH systems and
+under multi-level Fig. 11 combiner trees, and an LM tenant served
+through ``deploy()`` must emit exactly the dense ``serving.Engine``'s
+greedy tokens while its stats row sums into the fleet roll-up like any
+sensor app."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import qwen1p5_0p5b
+from repro.lm import (CompiledLM, LM_LINEARS, TransformerParams,
+                      compile_lm, lm_request, tokens_from_state)
+from repro.models import model as model_lib
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = qwen1p5_0p5b.reduced_serving()
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _rel(a, b):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    return float(np.max(np.abs(a - b)) / max(np.max(np.abs(b)), 1e-12))
+
+
+def _dense_ref(cfg, params, toks):
+    cfg = cfg.replace(decode_per_slot=True)
+    logits, cache = jax.jit(
+        lambda p, b: model_lib.prefill(cfg, p, b))(params,
+                                                   {"tokens": toks})
+    return cfg, logits, cache
+
+
+# ------------------------------------------------------------------- #
+# mapped forward == dense forward
+# ------------------------------------------------------------------- #
+@pytest.mark.parametrize("system,geometry", [
+    ("memristor", None),
+    ("digital", None),
+    # 4-row tiles on d_model=64 → 16 sub-neuron partials per linear →
+    # a ≥2-level Fig. 11 combiner tree on the mapped path
+    ("memristor", (4, 32)),
+])
+def test_mapped_matches_dense(setup, system, geometry):
+    cfg, params = setup
+    clm = compile_lm(TransformerParams(cfg, params), system=system,
+                     geometry=geometry)
+    if geometry == (4, 32):
+        assert any(len(plans[n].levels) >= 2
+                   for plans in clm.plans for n in LM_LINEARS)
+
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, cfg.vocab_size, size=(2, 7))
+    dcfg, d_logits, d_cache = _dense_ref(cfg, params, toks)
+    m_logits, m_cache = clm.prefill(toks)
+    assert _rel(m_logits, d_logits) <= 1e-6
+    assert max(_rel(a, b) for a, b in zip(jax.tree.leaves(m_cache),
+                                          jax.tree.leaves(d_cache))) \
+        <= 1e-6
+
+    # per-slot decode: each lane at its own position
+    step = np.asarray([[3], [9]], np.int32)
+    pos = np.asarray([7, 7], np.int32)
+    d_step, _ = jax.jit(lambda p, c, t, q: model_lib.decode_step(
+        dcfg, p, c, t, q))(params, d_cache, step, pos)
+    m_step, _ = clm.decode(m_cache, step, pos)
+    assert _rel(m_step, d_step) <= 1e-6
+
+
+def test_compiled_lm_structure(setup):
+    cfg, params = setup
+    clm = compile_lm(cfg, seed=3, tokens_per_second=10.0)
+    assert isinstance(clm, CompiledLM)
+    assert len(clm.plans) == cfg.num_layers
+    assert all(set(p) == set(LM_LINEARS) for p in clm.plans)
+    # the analytic cost chip maps 7 linears per layer as nets
+    assert len(clm.chip.mapping.units) == 7 * cfg.num_layers
+    assert clm.chip.plan is None            # analytic: no programmed MLP
+    rep = clm.report()
+    assert rep.area_mm2 > 0 and rep.power_mw > 0
+    # seeded compile == dense init with the same seed
+    ref = model_lib.init_params(clm.cfg, jax.random.PRNGKey(3))
+    assert all(bool(jnp.all(a == b)) for a, b in
+               zip(jax.tree.leaves(clm.params), jax.tree.leaves(ref)))
+
+
+def test_compile_lm_rejects_wrong_inputs(setup):
+    cfg, _ = setup
+    from repro.core.crossbar_layer import MLPSpec
+
+    with pytest.raises(TypeError, match="ModelConfig or "
+                                        "TransformerParams"):
+        compile_lm(MLPSpec((4, 2)))
+    with pytest.raises(NotImplementedError, match="dense transformer"):
+        compile_lm(cfg.replace(family="moe"))
+
+
+def test_compile_chip_points_model_configs_at_compile_lm(setup):
+    """Satellite: the sensor compiler names the right entry point when
+    handed a transformer config."""
+    cfg, _ = setup
+    from repro.chip import compile_chip
+
+    with pytest.raises(NotImplementedError,
+                       match=r"repro\.lm\.compile_lm"):
+        compile_chip(cfg)
+
+
+# ------------------------------------------------------------------- #
+# decode-as-streaming through deploy()
+# ------------------------------------------------------------------- #
+def _engine_oracle(cfg, params, prompts, n_new, cache_len=64):
+    from repro.serving.engine import Engine, Request
+
+    eng = Engine(cfg, params, slots=max(2, len(prompts)),
+                 cache_len=cache_len)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=list(p), max_new_tokens=n_new))
+    eng.run_until_drained()
+    return [st.generated for st in
+            sorted(eng.finished, key=lambda st: st.request.uid)]
+
+
+def test_lm_tenant_tokens_match_dense_engine(setup):
+    cfg, params = setup
+    from repro.deploy import AppSpec, deploy
+
+    dep = deploy(AppSpec("lm", cfg, params=params, cache_len=64,
+                         lanes_per_chip=2))
+    rng = np.random.default_rng(5)
+    prompts = [list(rng.integers(0, cfg.vocab_size, size=n))
+               for n in (4, 6, 3, 5)]
+    for p in prompts:
+        assert dep.submit_tokens("lm", p, max_new_tokens=5)
+    dep.run_until_drained()
+    got = dep.generated_tokens("lm")
+    assert len(got) == len(prompts)
+    assert all(len(t) == 5 for t in got.values())
+    assert [got[uid] for uid in sorted(got)] == \
+        _engine_oracle(cfg, params, prompts, 5)
+    stats = dep.stats()
+    assert stats.apps["lm"].items == stats.fleet.items == 20
+    dep.close()
+
+
+def test_lm_tenant_sensor_verbs_are_guarded(setup):
+    cfg, params = setup
+    from repro.deploy import AppSpec, deploy
+
+    dep = deploy(AppSpec("lm", cfg, params=params, cache_len=32))
+    with pytest.raises(TypeError, match="submit_tokens"):
+        dep.submit("lm", np.zeros((3, 1), np.float32))
+    with pytest.raises(TypeError, match="submit_tokens"):
+        dep.stream("lm", np.zeros((3, 1), np.float32))
+    with pytest.raises(NotImplementedError, match="compile_lm"):
+        dep.reprogram("lm", params)
+    with pytest.raises(ValueError, match="cache_len"):
+        dep.submit_tokens("lm", [1, 2, 3], max_new_tokens=40)
+    dep.close()
+
+    # and the reverse direction: submit_tokens on a sensor tenant
+    from repro.core.crossbar_layer import MLPSpec, mlp_init
+
+    spec = MLPSpec((8, 4), activation="threshold",
+                   out_activation="linear")
+    dep = deploy(AppSpec("s", spec,
+                         params=mlp_init(jax.random.PRNGKey(0), spec)))
+    with pytest.raises(TypeError, match="sensor tenant"):
+        dep.submit_tokens("s", [1, 2])
+    dep.close()
+
+
+def test_lm_appspec_validation(setup):
+    cfg, _ = setup
+    from repro.deploy import AppSpec, DeploymentSpec, deploy
+
+    with pytest.raises(ValueError, match="cache_len"):
+        AppSpec("lm", cfg, cache_len=1)
+    with pytest.raises(ValueError, match="analytic"):
+        deploy(DeploymentSpec(apps=(
+            AppSpec("lm", cfg, analytic=True),)))
+
+
+def test_lm_resize_preserves_continuations(setup):
+    """Elastic resize mid-decode: evicted LM lanes re-admit by
+    re-prefilling prompt + emitted prefix into the rebuilt cache —
+    greedy determinism makes the final streams identical to an
+    uninterrupted run."""
+    cfg, params = setup
+    from repro.deploy import AppSpec, deploy
+
+    dep = deploy(AppSpec("lm", cfg, params=params, cache_len=64,
+                         lanes_per_chip=2), n_chips=1)
+    rng = np.random.default_rng(9)
+    prompts = [list(rng.integers(0, cfg.vocab_size, size=n))
+               for n in (5, 4)]
+    for p in prompts:
+        assert dep.submit_tokens("lm", p, max_new_tokens=6)
+    dep.step()
+    dep.step()
+    dep.resize(1)                       # same size: still evict+requeue
+    dep.run_until_drained()
+    got = dep.generated_tokens("lm")
+    assert [got[uid] for uid in sorted(got)] == \
+        _engine_oracle(cfg, params, prompts, 6)
+    dep.close()
+
+
+def test_lm_request_and_state_helpers():
+    req = lm_request((1, 2, 3), max_new_tokens=4)
+    assert req.prompt == (1, 2, 3)
+    assert req.items.shape == (4, 1)
+    with pytest.raises(ValueError, match="empty prompt"):
+        lm_request(())
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        lm_request((1,), max_new_tokens=0)
+
+    class _St:
+        outputs = [np.asarray([3.0]), np.asarray([7.0])]
+    assert tokens_from_state(_St()) == [3, 7]
+
+
+# ------------------------------------------------------------------- #
+# the co-resident duo, end to end (subprocess, 2 simulated devices)
+# ------------------------------------------------------------------- #
+_DUO_SCRIPT = """
+import json
+import jax
+import numpy as np
+from repro.configs import qwen1p5_0p5b
+from repro.deploy import AppSpec, DeploymentSpec, deploy
+from repro.models import model as model_lib
+from repro.serving.engine import Engine, Request
+
+cfg = qwen1p5_0p5b.reduced_serving()
+params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+dep = deploy(DeploymentSpec(apps=(
+    AppSpec("sensor", "deep", items_per_second=100.0, lanes_per_chip=2),
+    AppSpec("lm", cfg, params=params, items_per_second=50.0,
+            lanes_per_chip=2, cache_len=64),
+)))
+rng = np.random.default_rng(0)
+prompts = [list(rng.integers(0, cfg.vocab_size, size=n))
+           for n in (5, 3, 7, 4)]
+for p in prompts:
+    assert dep.submit_tokens("lm", p, max_new_tokens=6)
+batches = [rng.uniform(0, 1, (3 + i, 784)).astype(np.float32)
+           for i in range(3)]
+for b in batches:
+    assert dep.submit("sensor", b)
+dep.run_until_drained()
+got = dep.generated_tokens("lm")
+
+eng = Engine(cfg, params, slots=4, cache_len=64)
+for i, p in enumerate(prompts):
+    eng.submit(Request(uid=i, prompt=p, max_new_tokens=6))
+eng.run_until_drained()
+oracle = [st.generated for st in
+          sorted(eng.finished, key=lambda st: st.request.uid)]
+
+s = dep.stats()
+rep = dep.report()
+print(json.dumps({
+    "devices": len(jax.devices()),
+    "n_chips": dep.n_chips,
+    "token_parity": [got[uid] for uid in sorted(got)] == oracle,
+    "lm_items": s.apps["lm"].items,
+    "sensor_items": s.apps["sensor"].items,
+    "fleet_items": s.fleet.items,
+    "lanes_exact": sum(a.lanes for a in s.apps.values())
+                   == s.fleet.lanes,
+    "requests_exact": sum(a.requests for a in s.apps.values())
+                      == s.fleet.requests,
+    "report_apps": sorted(rep.apps),
+}))
+"""
+
+
+def test_two_device_sensor_lm_duo_subprocess(sim_subprocess):
+    res = sim_subprocess(_DUO_SCRIPT, n_devices=2, timeout=900)
+    assert res["devices"] == 2 and res["n_chips"] == 2
+    assert res["token_parity"]
+    assert res["lm_items"] == 4 * 6
+    assert res["sensor_items"] == 3 + 4 + 5
+    assert res["fleet_items"] == res["lm_items"] + res["sensor_items"]
+    assert res["lanes_exact"] and res["requests_exact"]
+    assert res["report_apps"] == ["lm", "sensor"]

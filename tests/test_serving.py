@@ -107,3 +107,120 @@ def test_int8_kv_cache_matches_bf16_decode(setup):
     q = greedy(cfg.replace(kv_cache_dtype="int8"))
     agree = sum(a == b for a, b in zip(ref, q)) / len(ref)
     assert agree >= 0.75, (ref, q)
+
+
+# --------------------------------------------------------------------- #
+# slot-level KV-cache surgery (repro.serving.kvcache), directly
+# --------------------------------------------------------------------- #
+def _cache_tree(L=2, B=3, T=8, KH=2, dh=4, dtype=jnp.bfloat16):
+    """A hand-built batched cache pytree with recognizable contents:
+    leaf[l, b] is filled with ``10*l + b`` so lane provenance survives
+    any slice."""
+    import numpy as np
+
+    def leaf(shape):
+        a = np.zeros(shape, np.float32)
+        for l in range(L):
+            for b in range(B):
+                a[l, b] = 10 * l + b
+        return jnp.asarray(a, dtype)
+
+    return {"k": leaf((L, B, T, KH, dh)), "v": leaf((L, B, T, KH, dh)),
+            # the int8-cache scale companion: 4D, lane still axis 1
+            "ks": leaf((L, B, T, KH))}
+
+
+def test_write_slot_copies_one_lane_casts_and_pads():
+    """write_slot targets lane axis 1 on EVERY leaf ndim, casts the
+    f32 prefill output into the cache dtype, and a shorter prefix
+    (S < T) leaves the lane's tail rows untouched."""
+    from repro.serving import kvcache
+
+    cache = _cache_tree()
+    S = 5
+    src = jax.tree.map(
+        lambda x: jnp.full(x.shape[:1] + (1, S) + x.shape[3:], 7.0,
+                           jnp.float32),
+        cache)
+    out = kvcache.write_slot(cache, src, jnp.int32(1))
+    for name, leaf in out.items():
+        assert leaf.dtype == jnp.bfloat16          # cast, not promoted
+        got = jnp.asarray(leaf, jnp.float32)
+        # written region of lane 1
+        assert bool(jnp.all(got[:, 1, :S] == 7.0)), name
+        # lane 1's tail and the other lanes keep their provenance marks
+        for l in range(got.shape[0]):
+            assert bool(jnp.all(got[l, 1, S:] == 10 * l + 1)), name
+            for b in (0, 2):
+                assert bool(jnp.all(got[l, b] == 10 * l + b)), name
+
+
+def test_clear_slot_zeros_exactly_one_lane():
+    from repro.serving import kvcache
+
+    out = kvcache.clear_slot(_cache_tree(), jnp.int32(2))
+    for leaf in out.values():
+        got = jnp.asarray(leaf, jnp.float32)
+        assert bool(jnp.all(got[:, 2] == 0.0))
+        for l in range(got.shape[0]):
+            for b in (0, 1):
+                assert bool(jnp.all(got[l, b] == 10 * l + b))
+
+
+def test_write_clear_chain_is_donation_safe():
+    """Both functions donate the cache argument — the engine's admit/
+    retire loop must be able to chain them through the same logical
+    buffer without copies or stale reads."""
+    from repro.serving import kvcache
+
+    cache = _cache_tree()
+    S = cache["k"].shape[2]
+    for slot in range(3):
+        src = jax.tree.map(
+            lambda x, _s=slot: jnp.full(
+                x.shape[:1] + (1, S) + x.shape[3:], float(_s + 1),
+                jnp.float32),
+            cache)
+        cache = kvcache.write_slot(cache, src, jnp.int32(slot))
+    cache = kvcache.clear_slot(cache, jnp.int32(1))
+    got = jnp.asarray(cache["k"], jnp.float32)
+    assert bool(jnp.all(got[:, 0] == 1.0))
+    assert bool(jnp.all(got[:, 1] == 0.0))
+    assert bool(jnp.all(got[:, 2] == 3.0))
+
+
+def test_lane_axis_pinned_to_one():
+    """The cache layout contract: leaves are stacked (layers, B, ...)
+    by the model, so the lane axis is 1 regardless of leaf rank."""
+    from repro.serving import kvcache
+
+    assert all(kvcache._lane_axis(n) == 1 for n in (3, 4, 5))
+
+
+def test_ring_positions_mask_unwritten_and_evicted_slots():
+    """The decode-side companion of the surgery: _ring_positions marks
+    never-written slots negative (masked) before the ring fills, and
+    after wrap-around slot j holds the LAST absolute position congruent
+    to j — eviction of the oldest entries falls out of the arithmetic."""
+    from repro.models.attention import _ring_positions
+
+    T = 8
+    early = [int(v) for v in _ring_positions(jnp.int32(3), T)]
+    assert early == [0, 1, 2, 3, -4, -3, -2, -1]
+    late = [int(v) for v in _ring_positions(jnp.int32(10), T)]
+    assert late == [8, 9, 10, 3, 4, 5, 6, 7]    # 0..2 evicted
+    assert late[10 % T] == 10
+
+
+def test_store_prefill_ring_layout():
+    """_store_prefill keeps the LAST cache_len tokens of an overlong
+    prefill, laid out so absolute position p lands in slot p % T —
+    the same ring indexing decode writes with."""
+    from repro.models.attention import _store_prefill
+
+    T, S = 4, 6
+    k = jnp.arange(S, dtype=jnp.float32).reshape(1, S, 1, 1)
+    ring = _store_prefill(T, k)
+    assert ring.shape[1] == T
+    for p in range(S - T, S):                   # surviving positions
+        assert float(ring[0, p % T, 0, 0]) == float(p)
